@@ -1,0 +1,84 @@
+"""Beyond-paper optimizations (§6.1 future-work, implemented):
+
+  1. deployed speculative prefetch WITH transfer/compute overlap
+     (paper measured guesses but never deployed them);
+  2. aged-LFU / LRFU (the paper's own 'popularity + unused count' idea);
+  3. Belady bound — how far from perfect are all of them;
+  4. Markov transition predictor;
+  5. int8 expert storage (TPU-native stand-in for HQQ).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit, eval_prompts, replay_policy,
+                               trained_reduced_mixtral)
+from repro.core import OffloadEngine
+from repro.core.costmodel import HardwareProfile
+from repro.data import workload_from_paper_stats
+
+
+def run() -> None:
+    cfg, params = trained_reduced_mixtral()
+    prompts = eval_prompts()
+
+    # ---- 1. deployed speculative prefetch: stall vs overlap ----------
+    print("# deployed speculative prefetch (paper never deployed it)")
+    print("config,hit_rate,sim_tok_s,bytes_moved")
+    rows = {}
+    for name, kw in [
+        ("baseline-lru", dict(policy="lru")),
+        ("spec-no-overlap", dict(policy="lru", prefetch="spec")),
+        ("spec-overlap", dict(policy="lru", prefetch="spec", overlap=True)),
+        ("lfu-spec-overlap", dict(policy="lfu", prefetch="spec",
+                                  overlap=True)),
+    ]:
+        eng = OffloadEngine(params, cfg, cache_slots=4,
+                            hw=HardwareProfile.a6000_pcie4(), **kw)
+        for p in prompts:
+            eng.generate(p, 24)
+        s = eng.stats()
+        rows[name] = s
+        print(f"{name},{s['hit_rate']:.4f},{s['sim_tokens_per_s']:.2f},"
+              f"{s['bytes_transferred']:,}")
+        emit(f"beyond/{name}", 1e6 / max(s["sim_tokens_per_s"], 1e-9),
+             f"hit={s['hit_rate']:.4f}")
+    # the paper's §6.1 warning: prefetch w/o overlap adds transfers
+    assert rows["spec-no-overlap"]["bytes_transferred"] >= \
+        rows["baseline-lru"]["bytes_transferred"]
+    # ...and overlap recovers the win
+    assert rows["spec-overlap"]["sim_tokens_per_s"] >= \
+        rows["spec-no-overlap"]["sim_tokens_per_s"] - 1e-9
+
+    # ---- 2/3. policy ladder incl. oracle ------------------------------
+    print("\n# policy ladder on calibrated workload (cache 4/8), with the "
+          "Belady oracle bound")
+    wl = workload_from_paper_stats(num_layers=32, num_experts=8, top_k=2,
+                                   n_tokens=512, zipf_s=1.0, locality=0.05,
+                                   seed=2)
+    print("policy,hit_rate")
+    for pol in ("fifo", "random", "lru", "lfu", "lrfu", "aged-lfu", "belady"):
+        r = replay_policy(wl, pol, 4)
+        print(f"{pol},{r['hit_rate']:.4f}")
+        emit(f"ladder/{pol}", 0.0, f"hit={r['hit_rate']:.4f}")
+
+    # ---- 5. int8 storage ----------------------------------------------
+    print("\n# int8 expert storage (vs fp32 store): transfer bytes per "
+          "expert and output drift")
+    import jax.numpy as jnp
+    e_f32 = OffloadEngine(params, cfg, cache_slots=4, quant="none")
+    e_i8 = OffloadEngine(params, cfg, cache_slots=4, quant="int8")
+    st1, st2 = e_f32.init_state(1, 8), e_i8.init_state(1, 8)
+    tok = jnp.asarray([[5]], jnp.int32)
+    l1, _ = e_f32.decode_token(st1, tok, 0, 0)
+    l2, _ = e_i8.decode_token(st2, tok, 0, 0)
+    drift = float(jnp.max(jnp.abs(l1 - l2)))
+    b_f32 = e_f32.store.expert_nbytes((0, 0))
+    b_i8 = e_i8.store.expert_nbytes((0, 0))
+    print(f"bytes/expert: fp32={b_f32:,} int8={b_i8:,} "
+          f"({b_f32 / b_i8:.2f}x smaller); max logit drift {drift:.4f}")
+    emit("beyond/int8", 0.0, f"compress={b_f32 / b_i8:.2f}x;drift={drift:.4f}")
+
+
+if __name__ == "__main__":
+    run()

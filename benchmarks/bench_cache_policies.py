@@ -1,0 +1,82 @@
+"""Paper Table 2: LRU (baseline) vs LFU (proposed) — plus the
+beyond-paper policies (aged-LFU, LRFU, FIFO, random, Belady bound).
+
+Two workload sources:
+  (a) calibrated synthetic workloads (paper-stat imbalance zipf_s=1.0,
+      temporal locality 0.3) — controlled ground truth;
+  (b) decode traces of the trained reduced Mixtral — real router.
+
+Tokens/s per GPU profile are modeled from each policy's measured miss
+rate with the paper's four GPUs' constants.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (emit, eval_prompts, replay_policy,
+                               trained_reduced_mixtral)
+from repro.configs import get_config
+from repro.core import OffloadEngine
+from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
+from repro.data import workload_from_paper_stats
+
+POLICIES = ("lru", "lfu", "aged-lfu", "lrfu", "fifo", "random", "belady")
+GPUS = ("a100", "a6000", "l40", "3090")
+
+
+def run() -> None:
+    full = get_config("mixtral-8x7b")
+    mb = ModelBytes.from_config(full, expert_dtype_bytes=0.35)
+
+    # ---------------- (a) calibrated workload --------------------------
+    wl = workload_from_paper_stats(num_layers=32, num_experts=8, top_k=2,
+                                   n_tokens=512, zipf_s=1.0, locality=0.05,
+                                   seed=0)
+    print("# Table 2 analogue (a): calibrated workload (zipf=1.0, "
+          "measured temporal locality ~0.39 — paper 'sometimes near "
+          "30%'), cache=4 of 8 experts")
+    hdr = "policy,hit_rate,precision,recall," + ",".join(
+        f"tok_s_{g}" for g in GPUS)
+    print(hdr)
+    base_hit = {}
+    for pol in POLICIES:
+        r = replay_policy(wl, pol, cache_size=4)
+        miss_per_layer = (1 - r["hit_rate"]) * wl.top_k
+        tps = []
+        for g in GPUS:
+            cm = CostModel(HardwareProfile.by_name(g), mb)
+            tps.append(cm.tokens_per_second(miss_per_layer))
+        print(f"{pol},{r['hit_rate']:.4f},{r['precision']:.4f},"
+              f"{r['recall']:.4f}," + ",".join(f"{t:.2f}" for t in tps))
+        base_hit[pol] = r["hit_rate"]
+        emit(f"table2a/{pol}", 1e6 / tps[1],
+             f"hit={r['hit_rate']:.4f};P={r['precision']:.4f};"
+             f"R={r['recall']:.4f}")
+    # the paper's core claim on its own terms:
+    assert base_hit["lfu"] >= base_hit["lru"], \
+        "LFU should beat LRU under expert imbalance"
+    assert base_hit["belady"] >= max(v for k, v in base_hit.items()
+                                     if k != "belady")
+    print(f"# LFU vs LRU hit-rate delta: "
+          f"{base_hit['lfu'] - base_hit['lru']:+.4f} "
+          f"(Belady headroom: {base_hit['belady'] - base_hit['lfu']:+.4f})")
+
+    # ---------------- (b) trained reduced model ------------------------
+    cfg_r, params = trained_reduced_mixtral()
+    print("\n# Table 2 analogue (b): trained reduced Mixtral decode traces,"
+          " cache=4 of 8")
+    print("policy,hit_rate,precision,recall,sim_tok_s_a6000")
+    for pol in ("lru", "lfu", "aged-lfu", "lrfu"):
+        eng = OffloadEngine(params, cfg_r, cache_slots=4, policy=pol,
+                            hw=HardwareProfile.a6000_pcie4())
+        for p in eval_prompts():
+            eng.generate(p, 24)
+        s = eng.stats()
+        print(f"{pol},{s['hit_rate']:.4f},{s['cache_precision']:.4f},"
+              f"{s['cache_recall']:.4f},{s['sim_tokens_per_s']:.2f}")
+        emit(f"table2b/{pol}", 1e6 / max(s["sim_tokens_per_s"], 1e-9),
+             f"hit={s['hit_rate']:.4f}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Fig 7 + §5.2/§6.1: per-layer expert activation distributions,
+their entropy (imbalance), and the temporal-locality statistic (§3.1).
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import emit, eval_prompts, trained_reduced_mixtral
+from repro.core import OffloadEngine
+
+
+def run() -> None:
+    cfg, params = trained_reduced_mixtral()
+    eng = OffloadEngine(params, cfg, cache_slots=cfg.num_experts,
+                        policy="lru")  # full-resident: pure activation trace
+    for p in eval_prompts(n=6):
+        eng.generate(p, 32)
+    tr = eng.trace
+    E = cfg.num_experts
+    max_h = math.log2(E)
+
+    print("# Fig 7 analogue: activation histogram per layer "
+          f"(uniform entropy = {max_h:.2f} bits)")
+    print("layer,entropy_bits," + ",".join(f"e{e}" for e in range(E)))
+    for l in range(cfg.num_layers):
+        hist = tr.expert_histogram(l, E)
+        ent = tr.activation_entropy(l, E)
+        print(f"{l},{ent:.3f}," + ",".join(str(c) for c in hist))
+        emit(f"fig7/layer{l}", 0.0,
+             f"entropy={ent:.3f};top_share="
+             f"{max(hist) / max(sum(hist), 1):.3f}")
+
+    loc = tr.temporal_locality()
+    rand = cfg.num_experts_per_tok / E
+    print(f"\n# temporal locality P(expert repeats from prev token) = "
+          f"{loc:.3f} (random would be {rand:.3f}; paper reports 'sometimes"
+          f" near 0.30' vs 0.125 random)")
+    ents = [tr.activation_entropy(l, E) for l in range(cfg.num_layers)]
+    print(f"# imbalance: mean entropy {np.mean(ents):.3f} bits vs uniform "
+          f"{max_h:.2f} — skew is the stronger structure, as §6.1 argues")
+    emit("locality/temporal", 0.0, f"p={loc:.3f};random={rand:.3f}")
+
+
+if __name__ == "__main__":
+    run()

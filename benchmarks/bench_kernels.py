@@ -1,0 +1,69 @@
+"""Kernel micro-benchmarks: XLA-path wall time on this CPU (the Pallas
+path is TPU-target; interpret mode checks correctness, not speed) +
+analytic MXU/VMEM occupancy of the chosen BlockSpecs."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit
+
+
+def timeit(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else \
+        jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> None:
+    from repro.kernels import ops
+    rng = np.random.default_rng(0)
+
+    E, C, d, F = 8, 256, 512, 1024
+    x = jnp.asarray(rng.normal(size=(E, C, d)), jnp.float32)
+    w1 = jnp.asarray(rng.normal(size=(E, d, F)) * 0.05, jnp.float32)
+    w3 = jnp.asarray(rng.normal(size=(E, d, F)) * 0.05, jnp.float32)
+    w2 = jnp.asarray(rng.normal(size=(E, F, d)) * 0.05, jnp.float32)
+    us = timeit(lambda: ops.moe_ffn(x, w1, w3, w2, impl="xla"))
+    flops = 2 * 3 * E * C * d * F
+    emit("kernel/moe_gemm_xla_cpu", us, f"gflops={flops / us / 1e3:.1f}")
+
+    # VMEM working set of the production BlockSpec (bc=128, bf=512, d=4096)
+    bc, bf, dd = 128, 512, 4096
+    vmem = (bc * dd * 2 + 2 * dd * bf * 2 + bf * dd * 2 + bc * dd * 4)
+    emit("kernel/moe_gemm_vmem_bytes", 0.0,
+         f"{vmem / 2**20:.1f}MiB_of_~128MiB_v5e_VMEM_OK={vmem < 100 * 2**20}")
+
+    B, S, H, hd = 2, 1024, 8, 128
+    q = jnp.asarray(rng.normal(size=(B, S, H, hd)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(B, S, 2, hd)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(B, S, 2, hd)), jnp.float32)
+    us = timeit(lambda: ops.flash_attention(q, k, v, impl="xla"))
+    emit("kernel/flash_attn_xla_cpu", us, f"S={S}")
+
+    vmem_fa = (128 * hd * 2 * 3 + 128 * 128 * 4 + 128 * hd * 4 + 2 * 128 * 4)
+    emit("kernel/flash_attn_vmem_bytes", 0.0, f"{vmem_fa / 2**10:.0f}KiB")
+
+    # ssd_chunk: XLA oracle wall time + VMEM claim of the Pallas tiling
+    G, Q, Hh, P, N = 8, 128, 16, 64, 128
+    dA = -jnp.abs(jnp.asarray(rng.normal(size=(G, Q, Hh)), jnp.float32)) * 0.1
+    xw = jnp.asarray(rng.normal(size=(G, Q, Hh, P)), jnp.float32)
+    Bm = jnp.asarray(rng.normal(size=(G, Q, N)), jnp.float32)
+    Cm = jnp.asarray(rng.normal(size=(G, Q, N)), jnp.float32)
+    us = timeit(lambda: ops.ssd_chunk(dA, xw, Bm, Cm, impl="xla")[0])
+    emit("kernel/ssd_chunk_xla_cpu", us, f"G{G}xQ{Q}xH{Hh}")
+    bh = 8
+    vmem_ssd = (Q * bh * P * 4 + 2 * Q * N * 4 + 2 * Q * Q * 4
+                + Q * bh * P * 4 + bh * P * N * 4)
+    emit("kernel/ssd_chunk_vmem_bytes", 0.0,
+         f"{vmem_ssd / 2**20:.2f}MiB_per_grid_step")
+
+
+if __name__ == "__main__":
+    run()

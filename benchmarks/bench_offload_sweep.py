@@ -1,0 +1,70 @@
+"""Paper Table 1: vary #offloads per layer — tokens/s up, memory down,
+(quality constant — caching is bit-transparent, asserted in tests).
+
+Peak memory + modeled tokens/s are computed at FULL Mixtral-8x7B scale
+(the paper's model) from the cost model; miss rates come from real LRU
+cache replay of the trained reduced model's decode traces at the same
+slots-to-experts ratio.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, eval_prompts, trained_reduced_mixtral
+from repro.configs import get_config
+from repro.core import OffloadEngine
+from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
+
+
+def run() -> None:
+    cfg_r, params = trained_reduced_mixtral()
+    full = get_config("mixtral-8x7b")
+    # the paper stores experts ~2-bit HQQ; slope per offload ≈ 2 GB
+    mb = ModelBytes.from_config(full, expert_dtype_bytes=0.35)
+
+    # held-out perplexity (the paper's MMLU axis is unavailable offline;
+    # quality is invariant to the cache config because caching is
+    # bit-transparent — one eval covers every row, tests assert identity)
+    import jax.numpy as jnp
+
+    from repro.data import lm_batches
+    from repro.models import transformer as tf
+    ev = next(lm_batches(cfg_r.vocab_size, 8, 64, 1, seed=99))
+    ev = {k: jnp.asarray(v) for k, v in ev.items()}
+    ppl = float(np.exp(tf.loss_fn(params, cfg_r, ev, remat=False,
+                                  moe_path="dense")))
+
+    print("# Table 1 analogue: offloads/layer vs modeled tok/s + peak MB "
+          "(Mixtral-8x7B dims, A6000+PCIe4 profile)")
+    print(f"# held-out synthetic PPL = {ppl:.2f} for EVERY row — quality "
+          "is cache-invariant (paper's MMLU drop came from changing the "
+          "quantization per row, not from caching)")
+    print("offloads,cache_slots,hit_rate,misses_per_layer,tokens_per_s,"
+          "peak_MB,ppl")
+    for offloads in (4, 5, 6):
+        slots = full.num_experts - offloads  # resident experts per layer
+        eng = OffloadEngine(params, cfg_r, cache_slots=slots, policy="lru")
+        for p in eval_prompts():
+            eng.generate(p, 24)
+        s = eng.stats()
+        miss_per_layer = s["misses"] / max(len(eng.trace.steps), 1)
+        cm = CostModel(HardwareProfile.a6000_pcie4(), mb)
+        tps = cm.tokens_per_second(miss_per_layer)
+        peak = cm.peak_memory_bytes(offloads) / 2**20
+        print(f"{offloads},{slots},{s['hit_rate']:.3f},"
+              f"{miss_per_layer:.3f},{tps:.2f},{peak:.1f},{ppl:.2f}")
+        emit(f"table1/offloads={offloads}", 1e6 / tps,
+             f"peak_MB={peak:.0f};hit={s['hit_rate']:.3f};ppl={ppl:.2f}")
+
+    # paper's qualitative claims
+    m4 = CostModel(HardwareProfile.a6000_pcie4(), mb).peak_memory_bytes(4)
+    m5 = CostModel(HardwareProfile.a6000_pcie4(), mb).peak_memory_bytes(5)
+    m6 = CostModel(HardwareProfile.a6000_pcie4(), mb).peak_memory_bytes(6)
+    slope = (m4 - m6) / 2 / 2**20
+    print(f"# memory slope per offload: {slope:.0f} MB "
+          f"(paper: ~2000 MB at 2-bit HQQ)")
+    assert m4 > m5 > m6
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,109 @@
+"""Shared benchmark infrastructure: the trained reduced Mixtral (cached
+across benches), policy-replay harness over calibrated workloads, and
+CSV emission in the ``name,us_per_call,derived`` house format."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "results")
+CKPT = os.path.join(RESULTS_DIR, "mixtral_reduced.npz")
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+@functools.lru_cache(maxsize=1)
+def trained_reduced_mixtral(steps: int = 120):
+    """Train (or load) the reduced Mixtral used by every trace bench.
+
+    Trained on the synthetic Markov LM so the router develops the uneven,
+    input-dependent expert selection the paper analyses (a random-init
+    router routes near-uniformly and would understate LFU's advantage).
+    """
+    import dataclasses as dc
+
+    from repro.configs import get_config, reduced
+    from repro.data import lm_batches
+    from repro.models import transformer as tf
+    from repro.training import load_checkpoint, save_checkpoint, train
+    from repro.training.optimizer import AdamWConfig
+
+    cfg = reduced(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                  experts=8, vocab=256)
+    cfg = dc.replace(cfg, dtype="float32", num_experts_per_tok=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    if os.path.exists(CKPT):
+        try:
+            params, _ = load_checkpoint(CKPT, params)
+            return cfg, params
+        except Exception:
+            pass
+    batches = lm_batches(cfg.vocab_size, 8, 64, steps, seed=0)
+    params, _ = train(cfg, batches, steps=steps, log_every=0,
+                      opt_cfg=AdamWConfig(lr=2e-3), moe_path="dense")
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    save_checkpoint(CKPT, params, step=steps)
+    return cfg, params
+
+
+def eval_prompts(n: int = 4, length: int = 6, vocab: int = 256,
+                 seed: int = 7) -> List[List[int]]:
+    rng = np.random.default_rng(seed)
+    return [list(map(int, rng.integers(1, vocab, length))) for _ in range(n)]
+
+
+# ---------------------------------------------------------------------
+# pure policy replay over a workload (no model in the loop)
+# ---------------------------------------------------------------------
+def replay_policy(workload, policy_name: str, cache_size: int,
+                  **policy_kw) -> Dict[str, float]:
+    """Drive each layer's access sequence through a fresh policy
+    instance; returns hit/miss + paper-style precision/recall."""
+    from repro.core.cache_policies import Belady, make_policy
+
+    hits = misses = 0
+    tp = n_cached = n_act = 0
+    for layer in range(workload.num_layers):
+        seq = workload.layer_sequence(layer)
+        if policy_name == "belady":
+            pol = make_policy("belady", cache_size,
+                              future=workload.flat_future(layer))
+        else:
+            pol = make_policy(policy_name, cache_size, **policy_kw)
+        cached: set = set()
+        for ids in seq:
+            inter = cached & set(ids)
+            tp += len(inter)
+            n_cached += len(cached)
+            n_act += len(ids)
+            for e in ids:
+                if pol.contains(e):
+                    hits += 1
+                    pol.on_access(e)
+                else:
+                    misses += 1
+                    if pol.full:
+                        # pin only the expert being streamed in (cache
+                        # may be smaller than a token's working set)
+                        v = pol.choose_victim(frozenset([e]))
+                        pol.remove(v)
+                        cached.discard(v)
+                    pol.on_insert(e)
+                    cached.add(e)
+                if isinstance(pol, Belady):
+                    pol.advance()
+            pol.tick()
+    return {
+        "hits": hits, "misses": misses,
+        "hit_rate": hits / max(hits + misses, 1),
+        "precision": tp / max(n_cached, 1),
+        "recall": tp / max(n_act, 1),
+    }

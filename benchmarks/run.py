@@ -1,0 +1,49 @@
+"""Benchmark driver — one module per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV lines (house format) plus each
+module's own tables. Run:  PYTHONPATH=src python -m benchmarks.run
+"""
+from __future__ import annotations
+
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_ablations, bench_adaptive_cache,
+                            bench_beyond_paper, bench_cache_policies,
+                            bench_expert_distribution, bench_kernels,
+                            bench_offload_sweep, bench_roofline,
+                            bench_speculative, bench_traces)
+
+    suite = [
+        ("table1_offload_sweep", bench_offload_sweep.run),
+        ("table2_cache_policies", bench_cache_policies.run),
+        ("fig13_14_speculative", bench_speculative.run),
+        ("fig7_expert_distribution", bench_expert_distribution.run),
+        ("fig1_6_8_12_traces", bench_traces.run),
+        ("beyond_paper", bench_beyond_paper.run),
+        ("ablations_62", bench_ablations.run),
+        ("adaptive_cache", bench_adaptive_cache.run),
+        ("kernels", bench_kernels.run),
+        ("roofline", bench_roofline.run),
+    ]
+    failed = []
+    for name, fn in suite:
+        print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
+        t0 = time.time()
+        try:
+            fn()
+            print(f"-- {name} done in {time.time() - t0:.1f}s")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED benches: {failed}")
+        sys.exit(1)
+    print("\nALL BENCHES OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,45 @@
+"""Quickstart: train a tiny Mixtral-family MoE on the synthetic LM,
+then serve it with offloaded experts under LRU vs LFU caching.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.data import lm_batches
+from repro.serving import OffloadServer
+from repro.training import train
+from repro.training.optimizer import AdamWConfig
+
+
+def main():
+    # 1. a reduced Mixtral-8x7B (same family, laptop-sized)
+    cfg = reduced(get_config("mixtral-8x7b"), layers=4, d_model=128,
+                  experts=8, vocab=256)
+    cfg = dataclasses.replace(cfg, dtype="float32", num_experts_per_tok=2)
+
+    # 2. train briefly on the synthetic Markov LM
+    batches = lm_batches(cfg.vocab_size, 8, 64, 80, seed=0)
+    params, losses = train(cfg, batches, steps=80, log_every=40,
+                           opt_cfg=AdamWConfig(lr=2e-3), moe_path="dense")
+    print(f"loss: {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+    # 3. serve with offloaded experts: cache 4 of 8 per layer
+    prompt = [5, 17, 42, 7]
+    for policy in ("lru", "lfu"):
+        srv = OffloadServer(params, cfg, cache_slots=4, policy=policy)
+        out = srv.complete(prompt, max_new=24)
+        s = srv.stats()
+        print(f"\n[{policy.upper()}] generated: {out[len(prompt):]}")
+        print(f"  hit_rate={s['hit_rate']:.3f} "
+              f"precision={s['cache_precision']:.3f} "
+              f"recall={s['cache_recall']:.3f} "
+              f"modeled_tok/s={s['sim_tokens_per_s']:.2f}")
+    print("\n(the generated tokens are identical: caching is "
+          "bit-transparent — only speed changes)")
+
+
+if __name__ == "__main__":
+    main()

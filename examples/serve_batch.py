@@ -1,0 +1,47 @@
+"""Batched serving comparison: on-device engine vs offload engine, on
+two architectures (dense qwen + MoE mixtral), with sampling.
+
+Run:  PYTHONPATH=src python examples/serve_batch.py
+"""
+import dataclasses
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import transformer as tf
+from repro.serving import OffloadServer, ServingEngine
+
+PROMPTS = [[1, 2, 3], [7, 8, 9, 10], [42]]
+
+
+def main():
+    # dense arch: plain batched on-device decode
+    cfg_d = dataclasses.replace(
+        reduced(get_config("qwen2.5-3b"), layers=2, d_model=128),
+        dtype="float32")
+    params_d = tf.init_params(cfg_d, jax.random.PRNGKey(0))
+    eng = ServingEngine(params_d, cfg_d, cache_len=64)
+    outs = eng.generate_batch(PROMPTS, max_new=8, temperature=0.8,
+                              top_p=0.9, seed=0)
+    print("qwen2.5 (device, batched, T=0.8/top_p=0.9):")
+    for p, o in zip(PROMPTS, outs):
+        print(f"  {p} -> {o}")
+
+    # MoE arch: offload mode, per-request stats
+    cfg_m = dataclasses.replace(
+        reduced(get_config("mixtral-8x7b"), layers=3, d_model=128, experts=8),
+        dtype="float32", num_experts_per_tok=2)
+    params_m = tf.init_params(cfg_m, jax.random.PRNGKey(1))
+    srv = OffloadServer(params_m, cfg_m, cache_slots=4, policy="lfu",
+                        prefetch="spec", overlap=True)
+    print("\nmixtral (offloaded experts, LFU + overlapped spec prefetch):")
+    for p in PROMPTS:
+        out = srv.complete(p, max_new=8, temperature=0.0)
+        print(f"  {p} -> {out[len(p):]}")
+    s = srv.stats()
+    print(f"  hit={s['hit_rate']:.3f} spec_P={s['spec_precision']:.3f} "
+          f"modeled tok/s={s['sim_tokens_per_s']:.1f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,19 @@
+from repro.configs.base import (
+    INPUT_SHAPES,
+    ModelConfig,
+    ShapeSpec,
+    get_config,
+    list_archs,
+    reduced,
+    register,
+)
+
+__all__ = [
+    "INPUT_SHAPES",
+    "ModelConfig",
+    "ShapeSpec",
+    "get_config",
+    "list_archs",
+    "reduced",
+    "register",
+]

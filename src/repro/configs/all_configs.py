@@ -1,0 +1,27 @@
+"""Importing this module registers every architecture config."""
+from repro.configs import (  # noqa: F401
+    deepseek_v2_236b,
+    jamba_1_5_large_398b,
+    llama4_scout_17b_a16e,
+    llama_3_2_vision_11b,
+    mamba2_2_7b,
+    mixtral_8x7b,
+    qwen1_5_0_5b,
+    qwen1_5_32b,
+    qwen2_5_3b,
+    starcoder2_3b,
+    whisper_tiny,
+)
+
+ASSIGNED = [
+    "whisper-tiny",
+    "starcoder2-3b",
+    "jamba-1.5-large-398b",
+    "mamba2-2.7b",
+    "llama4-scout-17b-a16e",
+    "qwen1.5-0.5b",
+    "deepseek-v2-236b",
+    "qwen2.5-3b",
+    "llama-3.2-vision-11b",
+    "qwen1.5-32b",
+]

@@ -1,0 +1,148 @@
+"""Latency / memory cost model for offloaded MoE inference.
+
+The container is CPU-only, so host→device *time* cannot be measured —
+but every quantity the paper reports is derivable from trace-level
+counts (hits/misses/prefetches) plus hardware constants:
+
+  token latency = attn_compute + moe_compute
+                + (1-overlap_hidden) * transfer_stall
+
+The defaults model the paper's setup (consumer GPU over PCIe4) and a
+TPU v5e host-DMA profile is provided as an alternative. Table 1's
+"~2 GB per extra offload" slope is reproduced by ``peak_memory_bytes``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional
+
+GiB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareProfile:
+    name: str
+    flops: float              # effective FLOP/s for the expert GEMMs
+    link_bw: float            # host->device bytes/s
+    link_latency: float       # per-transfer fixed cost (s)
+    hbm_bw: float             # device memory bytes/s
+
+    @classmethod
+    def a6000_pcie4(cls):
+        # ~38 TFLOP/s fp16 with ~50% MFU at bs=1; PCIe4 x16 ~25 GB/s eff.
+        return cls("a6000", 19e12, 25e9, 20e-6, 768e9)
+
+    @classmethod
+    def a100_pcie4(cls):
+        return cls("a100", 156e12, 25e9, 20e-6, 1555e9)
+
+    @classmethod
+    def l40_pcie4(cls):
+        return cls("l40", 45e12, 25e9, 20e-6, 864e9)
+
+    @classmethod
+    def rtx3090_pcie4(cls):
+        return cls("3090", 17e12, 22e9, 25e-6, 936e9)
+
+    @classmethod
+    def tpu_v5e(cls):
+        # 197 TFLOP/s bf16; host DMA ~ 32 GB/s; 819 GB/s HBM.
+        return cls("v5e", 98e12, 32e9, 10e-6, 819e9)
+
+    @classmethod
+    def by_name(cls, name: str) -> "HardwareProfile":
+        return {"a6000": cls.a6000_pcie4, "a100": cls.a100_pcie4,
+                "l40": cls.l40_pcie4, "3090": cls.rtx3090_pcie4,
+                "v5e": cls.tpu_v5e}[name]()
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelBytes:
+    """Byte/FLOP shapes of one model for the cost model."""
+    num_layers: int
+    d_model: int
+    expert_d_ff: int
+    num_experts: int
+    top_k: int
+    expert_bytes: int          # bytes of ONE expert's weights (as stored)
+    attn_bytes_per_layer: int  # non-expert per-layer weights resident bytes
+    vocab_bytes: int
+
+    @classmethod
+    def from_config(cls, cfg, *, expert_dtype_bytes: float = 2.0,
+                    dense_dtype_bytes: float = 2.0):
+        d, ff = cfg.d_model, cfg.expert_d_ff
+        expert_bytes = int(3 * d * ff * expert_dtype_bytes)
+        if cfg.use_mla:
+            r, rd, H, hd = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.num_heads, cfg.head_dim
+            attn = d * H * (hd + rd) + d * (r + rd) + r * H * 2 * hd + H * hd * d
+        else:
+            hd = cfg.head_dim
+            attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
+                + cfg.num_heads * hd * d
+        attn_bytes = int(attn * dense_dtype_bytes)
+        vocab_bytes = int(2 * cfg.vocab_size * d * dense_dtype_bytes)
+        return cls(cfg.num_layers, d, ff, cfg.num_experts,
+                   cfg.num_experts_per_tok, expert_bytes, attn_bytes, vocab_bytes)
+
+    def expert_flops_per_token(self) -> float:
+        return 2.0 * 3 * self.d_model * self.expert_d_ff
+
+    def attn_flops_per_token(self, ctx_len: int = 512) -> float:
+        # projections + score/value against ctx_len cached keys
+        proj = 2.0 * 4 * self.d_model * self.d_model
+        attn = 2.0 * 2 * self.d_model * ctx_len
+        return proj + attn
+
+
+@dataclasses.dataclass
+class CostModel:
+    hw: HardwareProfile
+    mb: ModelBytes
+    overlap: bool = False      # prefetch transfers hidden under compute?
+    ctx_len: int = 512
+
+    # ---------------------------------------------------------- memory
+    def peak_memory_bytes(self, offloads_per_layer: float) -> int:
+        """Device memory with `offloads_per_layer` experts offloaded
+        (cache slots hold num_experts - offloads resident experts;
+        may be fractional for non-uniform per-layer budgets)."""
+        resident = self.mb.num_experts - offloads_per_layer
+        per_layer = self.mb.attn_bytes_per_layer + resident * self.mb.expert_bytes
+        return int(self.mb.num_layers * per_layer + self.mb.vocab_bytes)
+
+    # ---------------------------------------------------------- timing
+    def expert_transfer_time(self) -> float:
+        return self.hw.link_latency + self.mb.expert_bytes / self.hw.link_bw
+
+    def layer_compute_time(self, batch: int = 1) -> float:
+        tok_flops = (self.mb.attn_flops_per_token(self.ctx_len)
+                     + self.mb.top_k * self.mb.expert_flops_per_token())
+        # decode is memory-bound; floor at the HBM read of the active weights
+        active_bytes = (self.mb.attn_bytes_per_layer
+                        + self.mb.top_k * self.mb.expert_bytes)
+        return max(batch * tok_flops / self.hw.flops,
+                   active_bytes / self.hw.hbm_bw)
+
+    def token_latency(self, misses_per_layer: float,
+                      prefetch_per_layer: float = 0.0,
+                      prefetch_hits_per_layer: float = 0.0,
+                      batch: int = 1) -> float:
+        """Seconds per token given trace-derived per-layer averages.
+
+        misses: demand fetches that stall the layer.
+        prefetch: speculative transfers issued (bandwidth cost).
+        prefetch_hits: correct guesses (they remove a future demand miss;
+        callers pass *post-prefetch* miss counts so this only matters for
+        the overlap window accounting).
+        """
+        t_comp = self.layer_compute_time(batch)
+        t_demand = misses_per_layer * self.expert_transfer_time()
+        t_spec = prefetch_per_layer * self.expert_transfer_time()
+        if self.overlap:
+            # speculative transfers hide under the NEXT layer's compute
+            t_spec = max(0.0, t_spec - t_comp)
+        return self.mb.num_layers * (t_comp + t_demand + t_spec)
+
+    def tokens_per_second(self, misses_per_layer: float, **kw) -> float:
+        return 1.0 / self.token_latency(misses_per_layer, **kw)

@@ -1,0 +1,113 @@
+"""Device-tier expert cache: fixed slot buffers + a pluggable policy.
+
+TPU-friendly layout: one stacked device buffer per weight matrix
+(``[n_slots, d, ff]`` etc., static shapes), a host-side slot map, and
+in-place slot updates (``buf.at[slot].set(w)``) standing in for the
+host→HBM DMA. All decisions (hit/miss/evict) happen on the host —
+control plane — exactly like the GPU baseline.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_policies import CachePolicy
+from repro.core.expert_store import ExpertStore
+
+
+class ExpertCache:
+    """Cache for ONE MoE layer's experts."""
+
+    def __init__(self, layer: int, n_slots: int, policy: CachePolicy,
+                 store: ExpertStore, shapes: Dict[str, tuple],
+                 dtype=jnp.float32):
+        assert policy.capacity == n_slots
+        self.layer = layer
+        self.n_slots = n_slots
+        self.policy = policy
+        self.store = store
+        self.buffers = {k: jnp.zeros((n_slots, *s), dtype) for k, s in shapes.items()}
+        self.slot_of: Dict[int, int] = {}
+        self._free: List[int] = list(range(n_slots))
+        # counters
+        self.hits = 0
+        self.misses = 0
+        self.prefetches = 0
+        self.bytes_transferred = 0
+
+    # ------------------------------------------------------------------
+    def cached_ids(self) -> Tuple[int, ...]:
+        return tuple(sorted(self.slot_of))
+
+    def contains(self, eid: int) -> bool:
+        return eid in self.slot_of
+
+    def _install(self, eid: int, pinned: frozenset = frozenset()
+                 ) -> Tuple[int, Optional[int]]:
+        """Fetch eid from the store into a slot. Returns (slot, evicted)."""
+        evicted = None
+        if self._free:
+            slot = self._free.pop()
+        else:
+            victim = self.policy.choose_victim(pinned)
+            slot = self.slot_of.pop(victim)
+            self.policy.remove(victim)
+            evicted = victim
+        w = self.store.fetch((self.layer, eid))
+        for k, v in w.items():
+            self.buffers[k] = self.buffers[k].at[slot].set(
+                jnp.asarray(v, self.buffers[k].dtype))
+        self.slot_of[eid] = slot
+        self.policy.on_insert(eid)
+        self.bytes_transferred += self.store.expert_nbytes((self.layer, eid))
+        return slot, evicted
+
+    def access(self, eids: Sequence[int]
+               ) -> Tuple[List[int], List[int], List[int]]:
+        """Demand access for this token: returns (hits, misses, evicted).
+
+        All of ``eids`` are pinned while installing so an expert needed
+        by the current token can never evict another one of them; the
+        caller chunks to ≤ capacity if the working set exceeds it.
+        """
+        assert len(set(eids)) <= self.n_slots, "working set exceeds cache"
+        pinned = frozenset(eids)
+        hits, misses, evicted = [], [], []
+        for eid in eids:
+            if eid in self.slot_of:
+                hits.append(eid)
+                self.policy.on_access(eid)
+            else:
+                misses.append(eid)
+                _, ev = self._install(eid, pinned)
+                if ev is not None:
+                    evicted.append(ev)
+        self.hits += len(hits)
+        self.misses += len(misses)
+        self.policy.tick()
+        return hits, misses, evicted
+
+    def prefetch(self, eids: Sequence[int]) -> List[int]:
+        """Speculatively admit eids (no demand stall). Returns the ids
+        actually transferred (already-cached ones are free)."""
+        moved = []
+        for eid in eids:
+            if eid in self.slot_of:
+                self.policy.on_access(eid)
+                continue
+            self._install(eid)
+            moved.append(eid)
+        self.prefetches += len(moved)
+        return moved
+
+    def gather(self, eids: Sequence[int]) -> Dict[str, jnp.ndarray]:
+        """Stacked device weights [len(eids), ...] for cached experts."""
+        slots = jnp.asarray([self.slot_of[e] for e in eids], jnp.int32)
+        return {k: v[slots] for k, v in self.buffers.items()}
+
+    def device_nbytes(self) -> int:
+        return sum(int(np.prod(v.shape)) * v.dtype.itemsize
+                   for v in self.buffers.values())

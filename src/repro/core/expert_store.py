@@ -1,0 +1,84 @@
+"""Host-tier expert parameter store.
+
+Experts live here (host RAM, numpy) by default — the "offloaded" tier.
+Supports bf16/fp32 storage and int8 per-channel quantization (the
+TPU-native stand-in for the paper's 2-bit HQQ GPU kernels; see
+DESIGN.md §hardware-adaptation). Byte accounting is real (``nbytes`` of
+what is actually stored).
+"""
+from __future__ import annotations
+
+from typing import Dict, Hashable, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Key = Tuple[int, int]  # (layer, expert_id)
+
+
+def _quantize_int8(w: np.ndarray):
+    scale = np.max(np.abs(w), axis=0, keepdims=True) / 127.0
+    scale = np.where(scale == 0, 1.0, scale)
+    q = np.clip(np.round(w / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
+
+class ExpertStore:
+    def __init__(self, *, quant: str = "none"):
+        assert quant in ("none", "int8")
+        self.quant = quant
+        self._data: Dict[Key, dict] = {}
+
+    def put(self, key: Key, weights: dict) -> None:
+        """weights: {'w1': [d,ff], 'w3': [d,ff], 'w2': [ff,d]} (device or np)."""
+        host = {k: np.asarray(v, dtype=np.float32) for k, v in weights.items()}
+        if self.quant == "int8":
+            entry = {}
+            for k, v in host.items():
+                q, s = _quantize_int8(v)
+                entry[k] = ("int8", q, s)
+            self._data[key] = entry
+        else:
+            self._data[key] = {k: ("raw", v, None) for k, v in host.items()}
+
+    def fetch(self, key: Key) -> dict:
+        """Dequantized fp32 weights (host)."""
+        entry = self._data[key]
+        out = {}
+        for k, (kind, v, s) in entry.items():
+            out[k] = v.astype(np.float32) * s if kind == "int8" else v
+        return out
+
+    def expert_nbytes(self, key: Key) -> int:
+        entry = self._data[key]
+        n = 0
+        for kind, v, s in entry.values():
+            n += v.nbytes + (s.nbytes if s is not None else 0)
+        return n
+
+    def total_nbytes(self) -> int:
+        return sum(self.expert_nbytes(k) for k in self._data)
+
+    def keys(self):
+        return list(self._data)
+
+    def __contains__(self, key):
+        return key in self._data
+
+    @classmethod
+    def from_params(cls, params, cfg, *, quant: str = "none") -> "ExpertStore":
+        """Strip the per-layer expert weights out of a stacked model
+        param tree into a store. Expects ``params['layers']['moe']``
+        with stacked experts [L, E, ...]."""
+        store = cls(quant=quant)
+        experts = params["layers"]["moe"]["experts"]
+        L = experts["w1"].shape[0]
+        E = experts["w1"].shape[1]
+        w1 = np.asarray(experts["w1"], np.float32)
+        w2 = np.asarray(experts["w2"], np.float32)
+        w3 = np.asarray(experts["w3"], np.float32)
+        for l in range(L):
+            for e in range(E):
+                store.put((l, e), {"w1": w1[l, e], "w3": w3[l, e], "w2": w2[l, e]})
+        return store

@@ -1,0 +1,282 @@
+"""MoE offloading engine — the paper's system, end to end.
+
+Runs decode for an MoE decoder (Mixtral family: GQA/MLA attention +
+MoE FFN) with experts offloaded to an ``ExpertStore`` and streamed
+through per-layer ``ExpertCache``s under a pluggable policy, with
+optional speculative (gate-ahead) or Markov pre-fetching. Every step is
+traced; simulated wall time comes from the ``CostModel`` (trace-level
+behaviour is real, transfer latency is modeled — DESIGN.md §9).
+
+Control plane = host Python (policy decisions, routing readback at
+batch≤8 decode, prefetch scheduling); data plane = jitted JAX (attention,
+expert GEMMs, slot updates).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.cache_policies import CachePolicy, make_policy
+from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
+from repro.core.expert_cache import ExpertCache
+from repro.core.expert_store import ExpertStore
+from repro.core.prefetch import MarkovPredictor, SpeculativePrefetcher
+from repro.core.trace import TraceRecorder
+from repro.models import attention as attn_lib
+from repro.models import transformer as tf
+from repro.models.layers import rms_norm, sinusoidal_positions
+
+
+def _layer_slice(tree, i):
+    return jax.tree.map(lambda x: x[i], tree)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def _expert_ffn(xf, w1, w3, w2, comb):
+    """xf [B,d]; w* [U,d,ff]/[U,ff,d]; comb [B,U] -> y [B,d]."""
+    h = jnp.einsum("bd,udf->buf", xf, w1)
+    g = jnp.einsum("bd,udf->buf", xf, w3)
+    out = jnp.einsum("buf,ufd->bud", jax.nn.silu(h) * g, w2)
+    return jnp.einsum("bud,bu->bd", out.astype(jnp.float32), comb)
+
+
+class OffloadEngine:
+    def __init__(self, params, cfg, *,
+                 cache_slots,  # int, or per-layer Sequence[int]
+                 policy: str = "lru",
+                 policy_factory: Optional[Callable[[int], CachePolicy]] = None,
+                 quant: str = "none",
+                 prefetch: Optional[str] = None,   # None | "spec" | "markov"
+                 hw: Optional[HardwareProfile] = None,
+                 overlap: bool = False,
+                 trace: Optional[TraceRecorder] = None,
+                 seed: int = 0):
+        assert cfg.is_moe, "offloading targets MoE experts"
+        assert prefetch in (None, "spec", "markov")
+        self.params = params
+        self.cfg = cfg
+        if isinstance(cache_slots, int):
+            slots = [cache_slots] * cfg.num_layers
+        else:
+            slots = list(cache_slots)
+            assert len(slots) == cfg.num_layers
+        # per-layer budgets (beyond paper: skewed layers need fewer slots)
+        self.slots = [max(1, min(s, cfg.num_experts)) for s in slots]
+        self.cache_slots = sum(self.slots) / cfg.num_layers
+        self.prefetch_mode = prefetch
+        self.trace = trace if trace is not None else TraceRecorder()
+        self.store = ExpertStore.from_params(params, cfg, quant=quant)
+
+        d, ff = cfg.d_model, cfg.expert_d_ff
+        shapes = {"w1": (d, ff), "w3": (d, ff), "w2": (ff, d)}
+        self.caches: List[ExpertCache] = []
+        for l in range(cfg.num_layers):
+            pol = (policy_factory(l) if policy_factory is not None
+                   else make_policy(policy, self.slots[l]))
+            self.caches.append(ExpertCache(l, self.slots[l], pol,
+                                           self.store, shapes))
+
+        mb = ModelBytes.from_config(cfg)
+        eb = self.store.expert_nbytes((0, 0))
+        mb = ModelBytes(**{**mb.__dict__, "expert_bytes": eb})
+        self.cost = CostModel(hw or HardwareProfile.a6000_pcie4(), mb,
+                              overlap=overlap)
+        self.sim_time = 0.0
+        self.tokens_done = 0
+        self.spec = SpeculativePrefetcher(cfg) if prefetch == "spec" else None
+        self.markov = (MarkovPredictor(cfg.num_layers, cfg.num_experts,
+                                       cfg.num_experts_per_tok)
+                       if prefetch == "markov" else None)
+        self._prompt_id = 0
+        self._rng = np.random.default_rng(seed)
+        self._prev_acts: Dict[int, Tuple[int, ...]] = {}
+
+    # ------------------------------------------------------------------
+    def init_state(self, batch: int, cache_len: int):
+        state = tf.init_decode_state(self.params, self.cfg, batch, cache_len,
+                                     dtype=jnp.float32)
+        # unstack attention caches into a python list for per-layer updates
+        layers = [
+            _layer_slice(state["layers"], l) for l in range(self.cfg.num_layers)
+        ]
+        return {"layers": layers}
+
+    def new_prompt(self):
+        self._prompt_id += 1
+        self._prev_acts = {}
+
+    # ------------------------------------------------------------------
+    def _route(self, p_l, x) -> Tuple[np.ndarray, np.ndarray]:
+        """x [B,1,d] -> (top ids [B,k], top probs [B,k]) on host."""
+        logits = np.asarray((x.astype(jnp.float32) @ p_l["moe"]["router"])[:, 0, :])
+        k = self.cfg.num_experts_per_tok
+        ids = np.argsort(-logits, axis=-1)[:, :k]
+        top = np.take_along_axis(logits, ids, axis=-1)
+        top = np.exp(top - top.max(axis=-1, keepdims=True))
+        probs = top / top.sum(axis=-1, keepdims=True)
+        return ids, probs
+
+    def _moe_offloaded(self, p_l, layer: int, h, token_idx: int,
+                       pending_guess: Tuple[int, ...],
+                       pending_moved: Tuple[int, ...] = ()):
+        cfg = self.cfg
+        x = rms_norm(h, p_l["ln2"], cfg.norm_eps)
+        ids, probs = self._route(p_l, x)   # [B,k]
+        B = ids.shape[0]
+
+        # union of needed experts, most-weighted first (deterministic)
+        weight_by_e: Dict[int, float] = {}
+        for b in range(B):
+            for j in range(ids.shape[1]):
+                e = int(ids[b, j])
+                weight_by_e[e] = weight_by_e.get(e, 0.0) + float(probs[b, j])
+        union = sorted(weight_by_e, key=lambda e: -weight_by_e[e])
+
+        cache = self.caches[layer]
+        cache_before = cache.cached_ids()
+
+        # working set may exceed the cache: stream it in chunks ≤ capacity
+        hits: List[int] = []
+        misses: List[int] = []
+        evicted: List[int] = []
+        y = jnp.zeros((B, self.cfg.d_model), jnp.float32)
+        cap = cache.n_slots
+        for c0 in range(0, len(union), cap):
+            chunk = union[c0:c0 + cap]
+            h_, m_, e_ = cache.access(chunk)
+            hits += h_
+            misses += m_
+            evicted += e_
+            w = cache.gather(chunk)
+            comb = np.zeros((B, len(chunk)), np.float32)
+            col = {e: i for i, e in enumerate(chunk)}
+            for b in range(B):
+                for j in range(ids.shape[1]):
+                    e = int(ids[b, j])
+                    if e in col:
+                        comb[b, col[e]] += probs[b, j]
+            y = y + _expert_ffn(x[:, 0, :], w["w1"], w["w3"], w["w2"],
+                                jnp.asarray(comb))
+        h = h + y[:, None, :].astype(h.dtype)
+        if "shared" in p_l["moe"]:
+            s = p_l["moe"]["shared"]
+            xs = x
+            h = h + ((jax.nn.silu(xs @ s["w1"]) * (xs @ s["w3"])) @ s["w2"])
+
+        acts = tuple(int(e) for e in union)
+        self.trace.record(
+            prompt_id=self._prompt_id, token_idx=token_idx, layer=layer,
+            activated=acts,
+            gate_weights=tuple(float(weight_by_e[e]) for e in union),
+            cache_before=cache_before, cache_after=cache.cached_ids(),
+            hits=tuple(hits), misses=tuple(misses), evicted=tuple(evicted),
+            spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved))
+        return h, acts, len(misses)
+
+    # ------------------------------------------------------------------
+    def decode_token(self, state, token, pos: int, token_idx: int):
+        """token [B,1] int32. Returns (logits [B,V], state)."""
+        cfg = self.cfg
+        params = self.params
+        B = token.shape[0]
+        h = params["embed"][token]
+        if cfg.pos_emb == "sinusoidal":
+            p2 = jnp.full((B, 1), pos, jnp.int32)
+            h = h + sinusoidal_positions(p2, cfg.d_model).astype(h.dtype)
+
+        # guesses issued at layer l are consumed at layer l+1 of the SAME
+        # token pass (the prefetch travels ahead of the compute wavefront)
+        pending: Dict[int, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {}
+        step_misses = 0
+        step_prefetch = 0
+
+        for l in range(cfg.num_layers):
+            p_l = _layer_slice(params["layers"], l)
+            h, state["layers"][l] = tf._attn_decode(
+                p_l, cfg, h, state["layers"][l], jnp.int32(pos), None)
+
+            # --- speculative guess for layer l+1 (paper §3.2) ---------
+            guess: Tuple[int, ...] = ()
+            if self.spec is not None and l + 1 < cfg.num_layers:
+                p_next = _layer_slice(params["layers"], l + 1)
+                guess = self.spec.guess(h, p_next["ln2"],
+                                        p_next["moe"]["router"])
+                moved = self.caches[l + 1].prefetch(guess)
+                step_prefetch += len(moved)
+                pending[l + 1] = (guess, tuple(moved))
+            elif self.markov is not None and l + 1 < cfg.num_layers:
+                prev = self._prev_acts.get(l, ())
+                if prev:
+                    guess = self.markov.predict(l, prev)
+                    moved = self.caches[l + 1].prefetch(guess)
+                    step_prefetch += len(moved)
+                    pending[l + 1] = (guess, tuple(moved))
+
+            pg, pm = pending.get(l, ((), ()))
+            h, acts, misses = self._moe_offloaded(p_l, l, h, token_idx, pg, pm)
+            step_misses += misses
+            if self.markov is not None and l > 0:
+                self.markov.update(l - 1, self._prev_acts.get(l - 1, ()), acts)
+            self._prev_acts[l] = acts
+
+        logits = tf.logits_from_hidden(params, cfg, h)[:, 0]
+
+        # simulated clock (per token)
+        self.sim_time += self.cost.token_latency(
+            misses_per_layer=step_misses / cfg.num_layers,
+            prefetch_per_layer=step_prefetch / cfg.num_layers,
+            batch=B)
+        self.tokens_done += 1
+        return logits, state
+
+    # ------------------------------------------------------------------
+    def generate(self, prompt: Sequence[int], n_new: int, *,
+                 temperature: float = 0.0, seed: int = 0,
+                 cache_len: Optional[int] = None) -> List[int]:
+        """Single-sequence generation (the paper's batch-1 setting)."""
+        cfg = self.cfg
+        self.new_prompt()
+        total = len(prompt) + n_new
+        cache_len = cache_len or total
+        state = self.init_state(1, cache_len)
+        key = jax.random.PRNGKey(seed)
+        out: List[int] = list(prompt)
+        logits = None
+        for i, t in enumerate(prompt):
+            tok = jnp.asarray([[t]], jnp.int32)
+            logits, state = self.decode_token(state, tok, i, i)
+        for j in range(n_new):
+            if temperature > 0:
+                key, sub = jax.random.split(key)
+                nxt = int(jax.random.categorical(sub, logits / temperature, axis=-1)[0])
+            else:
+                nxt = int(jnp.argmax(logits, axis=-1)[0])
+            out.append(nxt)
+            pos = len(out) - 1
+            tok = jnp.asarray([[nxt]], jnp.int32)
+            logits, state = self.decode_token(state, tok, pos, pos)
+        return out
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        hits = sum(c.hits for c in self.caches)
+        misses = sum(c.misses for c in self.caches)
+        pre = sum(c.prefetches for c in self.caches)
+        prec, rec = self.trace.cache_precision_recall()
+        sp, sr = self.trace.spec_precision_recall()
+        return {
+            "hits": hits, "misses": misses, "prefetches": pre,
+            "hit_rate": hits / max(hits + misses, 1),
+            "cache_precision": prec, "cache_recall": rec,
+            "spec_precision": sp, "spec_recall": sr,
+            "bytes_transferred": sum(c.bytes_transferred for c in self.caches),
+            "sim_time_s": self.sim_time,
+            "sim_tokens_per_s": self.tokens_done / self.sim_time
+            if self.sim_time else 0.0,
+            "peak_memory_bytes": self.cost.peak_memory_bytes(
+                self.cfg.num_experts - self.cache_slots),
+        }

@@ -1,0 +1,167 @@
+"""Tracing system — the paper's first contribution.
+
+Records, for every (prompt, token, layer): the activated experts with
+their gate weights, the cache contents before/after, hit/miss/eviction
+events, and speculative-prefetch guesses. Every figure and table in the
+paper is a view over this record; ``render_layer`` reproduces the
+Fig 1-6/8-12 trace grids as ASCII, and the stats methods compute the
+precision/recall used in Tables 2 and §5.4.
+
+Cache precision/recall follow the paper's definitions (§4.2):
+  precision = |cached ∩ activated| / |cached|
+  recall    = |cached ∩ activated| / |activated|
+computed over the *pre-update* cache contents at every (token, layer),
+then averaged.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from collections import Counter, defaultdict
+from typing import Dict, List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class StepTrace:
+    prompt_id: int
+    token_idx: int
+    layer: int
+    activated: Tuple[int, ...]
+    gate_weights: Tuple[float, ...]
+    cache_before: Tuple[int, ...]
+    cache_after: Tuple[int, ...]
+    hits: Tuple[int, ...]
+    misses: Tuple[int, ...]
+    evicted: Tuple[int, ...]
+    spec_guess: Tuple[int, ...] = ()        # speculative guesses for THIS layer
+    prefetched: Tuple[int, ...] = ()        # experts actually pre-admitted
+
+
+class TraceRecorder:
+    def __init__(self):
+        self.steps: List[StepTrace] = []
+
+    def record(self, **kw) -> None:
+        self.steps.append(StepTrace(**kw))
+
+    # ------------------------------------------------------------ stats
+    def cache_precision_recall(self, *, layer: Optional[int] = None
+                               ) -> Tuple[float, float]:
+        tp = n_cached = n_act = 0
+        for s in self.steps:
+            if layer is not None and s.layer != layer:
+                continue
+            inter = set(s.cache_before) & set(s.activated)
+            tp += len(inter)
+            n_cached += len(s.cache_before)
+            n_act += len(s.activated)
+        prec = tp / n_cached if n_cached else 0.0
+        rec = tp / n_act if n_act else 0.0
+        return prec, rec
+
+    def hit_rate(self, *, layer: Optional[int] = None) -> float:
+        h = m = 0
+        for s in self.steps:
+            if layer is not None and s.layer != layer:
+                continue
+            h += len(s.hits)
+            m += len(s.misses)
+        return h / (h + m) if (h + m) else 0.0
+
+    def spec_precision_recall(self, *, skip_first_layer: bool = True
+                              ) -> Tuple[float, float]:
+        """P/R of speculative guesses vs truly activated experts.
+
+        The paper's §5.4 identity (|FP| == |FN| whenever the guess count
+        equals the activation count, hence precision == recall) is
+        asserted by tests over this computation.
+        """
+        tp = fp = fn = 0
+        for s in self.steps:
+            if skip_first_layer and s.layer == 0:
+                continue
+            if not s.spec_guess:
+                continue
+            g, a = set(s.spec_guess), set(s.activated)
+            tp += len(g & a)
+            fp += len(g - a)
+            fn += len(a - g)
+        prec = tp / (tp + fp) if (tp + fp) else 0.0
+        rec = tp / (tp + fn) if (tp + fn) else 0.0
+        return prec, rec
+
+    def expert_histogram(self, layer: int, num_experts: int) -> List[int]:
+        c = Counter()
+        for s in self.steps:
+            if s.layer == layer:
+                c.update(s.activated)
+        return [c.get(e, 0) for e in range(num_experts)]
+
+    def activation_entropy(self, layer: int, num_experts: int) -> float:
+        import math
+        h = self.expert_histogram(layer, num_experts)
+        tot = sum(h)
+        if not tot:
+            return 0.0
+        return -sum((c / tot) * math.log2(c / tot) for c in h if c)
+
+    def transfers(self) -> int:
+        return sum(len(s.misses) + len(s.prefetched) for s in self.steps)
+
+    def temporal_locality(self, *, layer: Optional[int] = None) -> float:
+        """P(expert of token t also used by token t-1) — the Mixtral-paper
+        statistic the baseline's caching exploits."""
+        by_tok: Dict[Tuple[int, int, int], set] = {}
+        for s in self.steps:
+            by_tok[(s.prompt_id, s.layer, s.token_idx)] = set(s.activated)
+        num = den = 0
+        for (pid, lay, tok), acts in by_tok.items():
+            if layer is not None and lay != layer:
+                continue
+            prev = by_tok.get((pid, lay, tok - 1))
+            if prev is None:
+                continue
+            num += len(acts & prev)
+            den += len(acts)
+        return num / den if den else 0.0
+
+    # ------------------------------------------------------------ views
+    def render_layer(self, layer: int, num_experts: int, *,
+                     prompt_id: Optional[int] = None,
+                     max_tokens: int = 64) -> str:
+        """ASCII analogue of the paper's Fig 2-6/8-12: rows = experts,
+        cols = tokens; '#'=activated+cached (hit), 'O'=activated only
+        (miss), '.'=cached only ("miscached"), ' '=neither."""
+        if prompt_id is None:
+            pids = [s.prompt_id for s in self.steps if s.layer == layer]
+            prompt_id = pids[0] if pids else 0
+        toks = sorted({s.token_idx for s in self.steps
+                       if s.layer == layer and s.prompt_id == prompt_id})
+        toks = toks[:max_tokens]
+        grid = [[" "] * len(toks) for _ in range(num_experts)]
+        for s in self.steps:
+            if s.layer != layer or s.prompt_id != prompt_id:
+                continue
+            if s.token_idx not in toks:
+                continue
+            col = toks.index(s.token_idx)
+            for e in range(num_experts):
+                act = e in s.activated
+                cached = e in s.cache_before
+                grid[e][col] = "#" if act and cached else (
+                    "O" if act else ("." if cached else " "))
+        lines = [f"layer {layer}  ('#'=hit 'O'=miss '.'=miscached)"]
+        for e in range(num_experts):
+            lines.append(f"e{e:03d} |" + "".join(grid[e]) + "|")
+        return "\n".join(lines)
+
+    def to_json(self) -> str:
+        return json.dumps([dataclasses.asdict(s) for s in self.steps])
+
+    @classmethod
+    def from_json(cls, s: str) -> "TraceRecorder":
+        tr = cls()
+        for d in json.loads(s):
+            d = {k: tuple(v) if isinstance(v, list) else v for k, v in d.items()}
+            tr.steps.append(StepTrace(**d))
+        return tr

@@ -1,0 +1,9 @@
+from repro.data.pipeline import (
+    ExpertWorkload,
+    lm_batches,
+    markov_lm,
+    workload_from_paper_stats,
+)
+
+__all__ = ["ExpertWorkload", "lm_batches", "markov_lm",
+           "workload_from_paper_stats"]

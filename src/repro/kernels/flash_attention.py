@@ -1,0 +1,106 @@
+"""Pallas TPU kernel: blockwise online-softmax (flash) attention.
+
+Causal and sliding-window masks; fp32 running max / denominator / accum
+held in VMEM scratch across the k-block loop (innermost grid dim).
+
+Layout: q/k/v [BH, S, hd] (batch×heads flattened by ops.py, GQA k/v
+pre-broadcast). grid = (BH, nQ, nK); each (bq × bk) tile is MXU-aligned
+(multiples of 128 enforced by the wrapper's padding).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+            scale: float, causal: bool, window: int, block_q: int,
+            block_k: int, n_k: int, seq_k: int):
+    # v (and the output) may be narrower than q/k — MLA attends with
+    # qk width hd+rd but carries hd-wide values
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                  # [bq, hd]
+    k = k_ref[0]                                  # [bk, hd]
+    v = v_ref[0]                                  # [bk, hd]
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+
+    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+    mask = k_pos < seq_k                          # k padding
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jnp.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: int = 0, scale=None,
+                           block_q: int = 128, block_k: int = 128,
+                           seq_k: Optional[int] = None,
+                           interpret: bool = False):
+    """q [BH, Sq, hd]; k/v [BH, Sk, hd] -> [BH, Sq, hd].
+
+    Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads; ``seq_k`` is
+    the true pre-padding key length so padded rows are masked);
+    ``window`` of 0 means unbounded (pure causal / full)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    vd = v.shape[-1]
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    n_k = Sk // block_k
+    grid = (BH, Sq // block_q, n_k)
+
+    kern = functools.partial(
+        _kernel, scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k=n_k,
+        seq_k=seq_k if seq_k is not None else Sk)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, block_k, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, block_k, vd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, vd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, vd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, vd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

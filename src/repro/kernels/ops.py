@@ -1,0 +1,98 @@
+"""Jit'd public wrappers around the Pallas kernels: shape checks,
+MXU-friendly padding, GQA broadcast, and an ``impl`` switch:
+
+  impl="pallas"            — real TPU lowering (target hardware)
+  impl="pallas_interpret"  — kernel body interpreted on CPU (tests)
+  impl="xla"               — the jnp oracle (default on CPU)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.moe_gemm import moe_gemm_pallas
+from repro.kernels.ssd_chunk import ssd_chunk_pallas
+
+
+def _pad_to(x, axis: int, mult: int):
+    n = x.shape[axis]
+    pad = (-n) % mult
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_c", "block_f"))
+def moe_ffn(x_e, w1, w3, w2, *, impl: str = "xla", block_c: int = 128,
+            block_f: int = 512):
+    """Grouped expert SwiGLU FFN. x_e [E,C,d] -> [E,C,d] fp32."""
+    if impl == "xla":
+        return ref.moe_gemm_ref(x_e, w1, w3, w2)
+    interpret = impl == "pallas_interpret"
+    E, C, d = x_e.shape
+    F = w1.shape[-1]
+    bc = min(block_c, max(8, C))
+    bf = min(block_f, F)
+    x_p, C0 = _pad_to(x_e, 1, bc)
+    w1_p, F0 = _pad_to(w1, 2, bf)
+    w3_p, _ = _pad_to(w3, 2, bf)
+    w2_p, _ = _pad_to(w2, 1, bf)
+    out = moe_gemm_pallas(x_p, w1_p, w3_p, w2_p, block_c=bc, block_f=bf,
+                          interpret=interpret)
+    return out[:, :C0, :]
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "block_h"))
+def ssd_chunk(dA, xw, Bm, Cm, *, impl: str = "xla", block_h: int = 8):
+    """SSD intra-chunk: dA [G,Q,H], xw [G,Q,H,P], Bm/Cm [G,Q,N] ->
+    (Y_intra [G,Q,H,P], S_chunk [G,H,P,N]), both fp32."""
+    if impl == "xla":
+        return ref.ssd_chunk_ref(dA, xw, Bm, Cm)
+    H = dA.shape[-1]
+    bh = block_h
+    while H % bh:
+        bh -= 1
+    return ssd_chunk_pallas(dA, xw, Bm, Cm, block_h=bh,
+                            interpret=impl == "pallas_interpret")
+
+
+@functools.partial(jax.jit, static_argnames=("impl", "causal", "window",
+                                             "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    impl: str = "xla", block_q: int = 128,
+                    block_k: int = 128):
+    """Multi-head attention over [B, S, H, hd] q/k and [B, S, KV, vd] v
+    (GQA broadcast inside; v may be narrower than q/k — MLA).
+    Returns [B, Sq, H, vd]."""
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    vd = v.shape[-1]
+    if KV != H:
+        rep = H // KV
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, hd)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * H, Sk, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * H, Sk, vd)
+
+    if impl == "xla":
+        out = ref.flash_attention_ref(qf, kf, vf, causal=causal, window=window)
+    else:
+        interpret = impl == "pallas_interpret"
+        bq = min(block_q, Sq)
+        bk = min(block_k, Sk)
+        qp, Sq0 = _pad_to(qf, 1, bq)
+        kp, _ = _pad_to(kf, 1, bk)
+        vp, _ = _pad_to(vf, 1, bk)
+        out = flash_attention_pallas(qp, kp, vp, causal=causal, window=window,
+                                     block_q=bq, block_k=bk, seq_k=Sk,
+                                     interpret=interpret)
+        out = out[:, :Sq0]
+    return out.reshape(B, H, Sq, vd).transpose(0, 2, 1, 3)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def moe_gemm_ref(x_e, w1, w3, w2):
+    """x_e [E,C,d]; w1/w3 [E,d,F]; w2 [E,F,d] -> [E,C,d] fp32."""
+    x = x_e.astype(jnp.float32)
+    h = jnp.einsum("ecd,edf->ecf", x, w1.astype(jnp.float32))
+    g = jnp.einsum("ecd,edf->ecf", x, w3.astype(jnp.float32))
+    a = jax.nn.silu(h) * g
+    return jnp.einsum("ecf,efd->ecd", a, w2.astype(jnp.float32))
+
+
+def ssd_chunk_ref(dA, xw, Bm, Cm):
+    """dA [G,Q,H]; xw [G,Q,H,P]; Bm/Cm [G,Q,N] ->
+    (Y_intra [G,Q,H,P], S_chunk [G,H,P,N]) — exact jnp oracle of the
+    SSD intra-chunk kernel."""
+    dA = dA.astype(jnp.float32)
+    xw = xw.astype(jnp.float32)
+    Bm = Bm.astype(jnp.float32)
+    Cm = Cm.astype(jnp.float32)
+    G, Q, H = dA.shape
+    cum = jnp.cumsum(dA, axis=1)
+    rel = cum[:, :, None, :] - cum[:, None, :, :]          # [G,Q,Q,H]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    decay = jnp.where(mask[None, :, :, None], jnp.exp(rel), 0.0)
+    scores = jnp.einsum("gin,gjn->gij", Cm, Bm)
+    y = jnp.einsum("gijh,gij,gjhp->gihp", decay, scores, xw)
+    decay_end = jnp.exp(cum[:, -1:, :] - cum)              # [G,Q,H]
+    s = jnp.einsum("gjh,gjn,gjhp->ghpn", decay_end, Bm, xw)
+    return y, s
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        scale=None):
+    """q [BH,Sq,hd]; k/v [BH,Sk,hd] -> [BH,Sq,hd] (exact softmax)."""
+    BH, Sq, hd = q.shape
+    Sk = k.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bqh,bkh->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window > 0:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkh->bqh", p, v.astype(jnp.float32)).astype(q.dtype)

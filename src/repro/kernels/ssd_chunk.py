@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: Mamba2/SSD intra-chunk compute.
+
+For one chunk of length Q it fuses, per head:
+    cum       = cumsum(dA)                      [Q, H]
+    decay_ij  = exp(cum_i - cum_j) · 1[i ≥ j]   (never leaves VMEM!)
+    scores    = C · Bᵀ                          [Q, Q]
+    Y_intra,i = Σ_j decay_ij · scores_ij · xw_j [Q, H, P]
+    S_chunk   = Σ_j exp(cum_Q - cum_j) · xw_j ⊗ B_j   [H, P, N]
+
+The XLA fallback materialises decay as [B, Q, Q, H] in HBM — measured
+as ~30% of jamba-398B's train-step traffic (EXPERIMENTS.md §Perf pair
+2). Here it lives tile-by-tile in VMEM. The sequential inter-chunk
+state scan stays in XLA (it is tiny: [B, H, P, N] per chunk).
+
+Grid: (B·C, H/block_h); per step the kernel unrolls over block_h heads,
+each head doing two [Q,Q]×[Q,P]-class MXU dots.
+
+VMEM per step (Q=128, block_h=8, P=64, N=128, fp32):
+  xw (Q·Hb·P) 256 KiB + B/C (2·Q·N) 128 KiB + decay/scores (2·Q²)
+  128 KiB + outs ≈ 1 MiB — far under the ~128 MiB v5e budget; Q=256
+  also fits (≈3 MiB).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(dA_ref, xw_ref, b_ref, c_ref, y_ref, s_ref, *, block_h: int):
+    dA = dA_ref[0].astype(jnp.float32)        # [Q, Hb]
+    xw = xw_ref[0].astype(jnp.float32)        # [Q, Hb, P]
+    B = b_ref[0].astype(jnp.float32)          # [Q, N]
+    C = c_ref[0].astype(jnp.float32)          # [Q, N]
+    Q = dA.shape[0]
+
+    cum = jnp.cumsum(dA, axis=0)              # [Q, Hb]
+    scores = jnp.dot(C, B.T, preferred_element_type=jnp.float32)  # [Q, Q]
+    mask = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    decay_end = jnp.exp(cum[-1:, :] - cum)    # [Q, Hb]
+
+    for h in range(block_h):                  # unrolled per head
+        rel = cum[:, None, h] - cum[None, :, h]
+        decay = jnp.where(mask, jnp.exp(rel), 0.0)        # [Q, Q] in VMEM
+        m = decay * scores
+        y_ref[0, :, h, :] = jnp.dot(m, xw[:, h, :],
+                                    preferred_element_type=jnp.float32)
+        s_ref[0, h, :, :] = jnp.dot((xw[:, h, :] * decay_end[:, h:h + 1]).T,
+                                    B, preferred_element_type=jnp.float32)
+
+
+def ssd_chunk_pallas(dA, xw, Bm, Cm, *, block_h: int = 8,
+                     interpret: bool = False):
+    """dA [G, Q, H]; xw [G, Q, H, P]; Bm/Cm [G, Q, N]  (G = B·n_chunks)
+    -> (Y_intra [G, Q, H, P] fp32, S_chunk [G, H, P, N] fp32)."""
+    G, Q, H = dA.shape
+    P = xw.shape[-1]
+    N = Bm.shape[-1]
+    assert H % block_h == 0, (H, block_h)
+    grid = (G, H // block_h)
+
+    kern = functools.partial(_kernel, block_h=block_h)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, Q, block_h), lambda g, h: (g, 0, h)),
+            pl.BlockSpec((1, Q, block_h, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+            pl.BlockSpec((1, Q, N), lambda g, h: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, block_h, P), lambda g, h: (g, 0, h, 0)),
+            pl.BlockSpec((1, block_h, P, N), lambda g, h: (g, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((G, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((G, H, P, N), jnp.float32),
+        ],
+        interpret=interpret,
+    )(dA, xw, Bm, Cm)

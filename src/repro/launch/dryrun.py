@@ -1,0 +1,237 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first
+# initialisation. 512 host devices back both the (16,16) single-pod and
+# the (2,16,16) multi-pod production meshes. Do NOT set this globally —
+# tests/benches must see 1 device.
+
+import argparse
+import json
+import re
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.configs.all_configs import ASSIGNED
+from repro.launch import specs as S
+from repro.launch.hlo_cost import analyze_compiled
+from repro.launch.mesh import make_production_mesh, sharding_rules
+from repro.models import transformer as tf
+from repro.models.sharding import param_pspecs, sharding_ctx
+from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.train_loop import make_train_step
+
+_DTYPE_BYTES = {"pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+                "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([\d,]*)\][^=]*?"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum result-shape bytes of every collective op in the optimized HLO."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        dt, dims, op = m.groups()
+        if op + "-start" in line and op + "-done" not in line:
+            pass  # count starts only once; done lines lack the shape anyway
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out[op] = out.get(op, 0) + int(n * nbytes)
+    return out
+
+
+# ---------------------------------------------------------------------
+def build_case(cfg, shape_name: str, mesh, *, baseline: bool = False):
+    """Returns (fn, abstract_args, in_shardings, out_shardings)."""
+    import dataclasses as _dc
+    from repro.models.sharding import sanitize_spec, sharding_ctx as _ctx
+    shape = INPUT_SHAPES[shape_name]
+    if baseline and cfg.ssm_state:
+        cfg = _dc.replace(cfg, ssm_chunk=256)  # pre-§Perf chunk size
+    rules = sharding_rules(cfg, mesh, global_batch=shape.global_batch,
+                           baseline=baseline)
+    with _ctx(mesh, rules):
+        return _build_case_inner(cfg, shape, shape_name, mesh, rules,
+                                 sanitize_spec)
+
+
+def _build_case_inner(cfg, shape, shape_name, mesh, rules, sanitize_spec):
+    # specs must be built under the sharding ctx: decode cache shapes
+    # depend on head padding, which depends on the active mesh rules
+    p_spec = S.params_spec(cfg)
+    p_pspecs = param_pspecs(p_spec, rules, mesh=mesh)
+
+    def ns(spec_tree, shape_tree):
+        return jax.tree.map(
+            lambda sp, sh: NamedSharding(mesh,
+                                         sanitize_spec(sp, sh.shape, mesh)),
+            spec_tree, shape_tree,
+            is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        opt_spec = jax.eval_shape(adamw_init, p_spec)
+        batch_spec = S.input_specs(cfg, shape_name)
+        opt_pspecs = S.opt_state_pspecs(p_pspecs, p_spec, cfg, rules)
+        b_pspecs = S.batch_pspecs(batch_spec, rules)
+        step = make_train_step(cfg, opt_cfg=AdamWConfig())
+
+        def fn(params, opt_state, batch):
+            return step(params, opt_state, batch)
+
+        args = (p_spec, opt_spec, batch_spec)
+        in_sh = (ns(p_pspecs, p_spec), ns(opt_pspecs, opt_spec),
+                 ns(b_pspecs, batch_spec))
+        out_sh = (ns(p_pspecs, p_spec), ns(opt_pspecs, opt_spec),
+                  NamedSharding(mesh, P()))
+        return fn, args, in_sh, out_sh, rules
+
+    if shape.kind == "prefill":
+        in_spec = S.input_specs(cfg, shape_name)
+        b_pspecs = S.batch_pspecs(in_spec, rules)
+
+        def fn(params, batch):
+            enc = None
+            if cfg.family == "encdec":
+                enc = tf.encoder_forward(params, cfg, batch["frames"])
+            elif cfg.family == "vlm":
+                enc = batch["patches"]
+            return tf.prefill(params, cfg, batch["tokens"], enc=enc)
+
+        args = (p_spec, in_spec)
+        in_sh = (ns(p_pspecs, p_spec), ns(b_pspecs, in_spec))
+        out_sh = NamedSharding(mesh, P(rules.get("batch"), None))
+        return fn, args, in_sh, out_sh, rules
+
+    # decode
+    cache_len, window = S.decode_geometry(cfg, shape)
+    in_spec = S.input_specs(cfg, shape_name)
+    state_pspecs = S.decode_state_pspecs(in_spec["state"], rules, mesh=mesh)
+
+    def fn(params, state, token, pos):
+        return tf.decode_step(params, cfg, state, token, pos, window=window)
+
+    args = (p_spec, in_spec["state"], in_spec["token"], in_spec["pos"])
+    b = rules.get("batch")
+    in_sh = (ns(p_pspecs, p_spec), ns(state_pspecs, in_spec["state"]),
+             NamedSharding(mesh, P(b, None)), NamedSharding(mesh, P()))
+    out_sh = (NamedSharding(mesh, P(b, None)),
+              ns(state_pspecs, in_spec["state"]))
+    return fn, args, in_sh, out_sh, rules
+
+
+def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,
+             baseline: bool = False, verbose: bool = True) -> Dict:
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    fn, args, in_sh, out_sh, rules = build_case(cfg, shape_name, mesh,
+                                                baseline=baseline)
+    with sharding_ctx(mesh, rules):
+        lowered = jax.jit(fn, in_shardings=in_sh,
+                          out_shardings=out_sh).lower(*args)
+        compiled = lowered.compile()
+    t1 = time.time()
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    # trip-count-aware per-device totals (XLA's cost_analysis counts a
+    # while body once — see hlo_cost.py)
+    rep = analyze_compiled(compiled)
+
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    total, active = cfg.param_counts()
+    res = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "x".join(str(v) for v in mesh.shape.values()),
+        "chips": n_chips,
+        # per-device (the HLO is the SPMD per-device program)
+        "flops": rep.flops,
+        "transcendental": rep.transcendental,
+        "bytes_accessed": rep.bytes_accessed,
+        "collective_bytes": rep.collectives,
+        "collective_total": rep.collective_total,
+        # XLA's own (loop bodies counted once) for cross-checking
+        "xla_flops": float(cost.get("flops", 0.0)),
+        "xla_bytes": float(cost.get("bytes accessed", 0.0)),
+        "params_total": total,
+        "params_active": active,
+        "compile_s": round(t1 - t0, 1),
+    }
+    if mem is not None:
+        res["memory"] = {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", 0),
+            "output_bytes": getattr(mem, "output_size_in_bytes", 0),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+            "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", 0),
+        }
+    if verbose:
+        print(f"[{arch} × {shape_name} × mesh {res['mesh']}] "
+              f"compile {res['compile_s']}s")
+        print(f"  per-device: flops={res['flops']:.3e} "
+              f"bytes={res['bytes_accessed']:.3e} "
+              f"collective={res['collective_total']:.3e} "
+              f"{ {k: f'{v:.2e}' for k, v in rep.collectives.items()} }")
+        if mem is not None:
+            print(f"  memory: args={res['memory']['argument_bytes']/2**30:.2f}GiB "
+                  f"out={res['memory']['output_bytes']/2**30:.2f}GiB "
+                  f"temp={res['memory']['temp_bytes']/2**30:.2f}GiB")
+    return res
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry run")
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--baseline", action="store_true",
+                    help="paper-faithful pre-optimization sharding (§Perf)")
+    ap.add_argument("--all", action="store_true",
+                    help="every (assigned arch × shape), this mesh")
+    ap.add_argument("--out", default=None, help="write JSON results here")
+    args = ap.parse_args()
+
+    cases = []
+    if args.all:
+        for a in ASSIGNED:
+            for s in INPUT_SHAPES:
+                cases.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cases = [(args.arch, args.shape)]
+
+    results, failures = [], []
+    for a, s in cases:
+        try:
+            results.append(run_case(a, s, multi_pod=args.multi_pod,
+                                     baseline=args.baseline))
+        except Exception as e:  # noqa: BLE001 — report and continue
+            print(f"[{a} × {s}] FAILED: {type(e).__name__}: {e}")
+            failures.append({"arch": a, "shape": s, "error": str(e)[:2000]})
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as f:
+            json.dump({"results": results, "failures": failures}, f, indent=1)
+    print(f"\n{len(results)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

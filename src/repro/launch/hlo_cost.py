@@ -1,0 +1,303 @@
+"""Trip-count-aware cost analysis over optimized HLO text.
+
+XLA's ``compiled.cost_analysis()`` counts a ``while`` body ONCE, so any
+scanned program (all our models scan over layers, kv-blocks, SSD chunks
+and loss chunks) under-reports FLOPs/bytes/collectives by the trip
+count. This module re-derives totals by parsing ``compiled.as_text()``:
+
+  * builds a symbol table of instruction result shapes per computation,
+  * counts dot FLOPs exactly (2 × result × contraction) and elementwise/
+    transcendental at 1 FLOP/element (XLA's convention),
+  * multiplies ``while`` bodies by ``backend_config.known_trip_count``,
+  * recurses through fusion/call/conditional computations,
+  * accumulates collective bytes (result-shape bytes) per collective op
+    with the same loop multipliers.
+
+Bytes accessed are counted at fusion boundaries (operands + results),
+matching HloCostAnalysis's memory-traffic convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2,
+                "u16": 2, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4,
+                "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+                "f8e4m3fn": 1, "f8e5m2": 1, "token": 0, "opaque": 0}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute", "ragged-all-to-all")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "abs",
+    "negate", "sign", "compare", "select", "and", "or", "xor", "not",
+    "clamp", "floor", "ceil", "round-nearest-afz", "round-nearest-even",
+    "shift-left", "shift-right-logical", "shift-right-arithmetic",
+    "remainder", "atan2",
+}
+_TRANSCENDENTAL = {"exponential", "exponential-minus-one", "log",
+                   "log-plus-one", "tanh", "rsqrt", "sqrt", "cbrt", "power",
+                   "sine", "cosine", "tan", "logistic", "erf"}
+_FREE = {"parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+         "copy", "copy-start", "copy-done", "reshape", "broadcast",
+         "transpose", "iota", "after-all", "partition-id", "replica-id",
+         "rng-bit-generator", "opt-barrier", "custom-call", "infeed",
+         "outfeed", "convert", "slice", "dynamic-slice",
+         "dynamic-update-slice", "pad", "concatenate", "reverse", "gather",
+         "scatter", "reduce", "reduce-window", "sort", "while", "fusion",
+         "call", "conditional", "dot", "convolution", "rng", "map",
+         "domain", "add-dependency"}
+
+
+# ---------------------------------------------------------------- shapes
+def shape_bytes(shape: str) -> int:
+    """'f32[512,512]{1,0}' or tuple '(s32[], f32[4]{0})' -> bytes."""
+    total = 0
+    for m in re.finditer(r"([a-z0-9]+)\[([\d,]*)\]", shape):
+        dt, dims = m.groups()
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def shape_elems(shape: str) -> int:
+    m = re.search(r"[a-z0-9]+\[([\d,]*)\]", shape)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(1).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def shape_dims(shape: str) -> List[int]:
+    m = re.search(r"[a-z0-9]+\[([\d,]*)\]", shape)
+    if not m:
+        return []
+    return [int(d) for d in m.group(1).split(",") if d]
+
+
+# ----------------------------------------------------------- text parse
+@dataclasses.dataclass
+class Instr:
+    name: str
+    shape: str
+    opcode: str
+    operands: List[str]
+    attrs: str
+
+
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*((?:\([^()]*\))|(?:[a-z0-9]+\[[\d,]*\](?:\{[^}]*\})?))\s*"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s+\(.*\)\s*->.*\{\s*$")
+
+
+def parse_module(text: str) -> Tuple[Dict[str, List[Instr]], Optional[str]]:
+    comps: Dict[str, List[Instr]] = {}
+    entry = None
+    cur: Optional[str] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_RE.match(line.strip())
+            if m:
+                cur = m.group(1)
+                comps[cur] = []
+                if line.strip().startswith("ENTRY"):
+                    entry = cur
+            continue
+        if line.strip() == "}":
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, shape, opcode, operands, attrs = m.groups()
+        ops = re.findall(r"%([\w.\-]+)", operands)
+        comps[cur].append(Instr(name, shape, opcode, ops, attrs))
+    return comps, entry
+
+
+# --------------------------------------------------------------- analyse
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    transcendental: float = 0.0
+    bytes_accessed: float = 0.0
+    collectives: Dict[str, float] = dataclasses.field(default_factory=dict)
+
+    @property
+    def collective_total(self) -> float:
+        return float(sum(self.collectives.values()))
+
+    def add_collective(self, op: str, b: float):
+        self.collectives[op] = self.collectives.get(op, 0.0) + b
+
+    def to_dict(self) -> Dict:
+        return {"flops": self.flops, "transcendental": self.transcendental,
+                "bytes_accessed": self.bytes_accessed,
+                "collectives": dict(self.collectives),
+                "collective_total": self.collective_total}
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _called(attrs: str) -> List[str]:
+    out = []
+    m = re.search(r"calls=%?([\w.\-]+)", attrs)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"body=%?([\w.\-]+)", attrs)
+    if m:
+        out.append(m.group(1))
+    m = re.search(r"condition=%?([\w.\-]+)", attrs)
+    if m:
+        out.append(m.group(1))
+    for m in re.finditer(r"(?:true_computation|false_computation|branch_computations=\{)[^}]*?%([\w.\-]+)", attrs):
+        out.append(m.group(1))
+    return out
+
+
+def _dot_flops(inst: Instr, shapes: Dict[str, str]) -> float:
+    lhs_shape = shapes.get(inst.operands[0], "")
+    dims = shape_dims(lhs_shape)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", inst.attrs)
+    contract = 1
+    if m and dims:
+        for d in m.group(1).split(","):
+            if d:
+                contract *= dims[int(d)]
+    return 2.0 * shape_elems(inst.shape) * contract
+
+
+class HloCost:
+    def __init__(self, text: str):
+        self.comps, self.entry = parse_module(text)
+        self._shape_tables: Dict[str, Dict[str, str]] = {
+            c: {i.name: i.shape for i in instrs}
+            for c, instrs in self.comps.items()
+        }
+
+    _LAYOUT_OPS = {"convert", "bitcast", "copy", "reshape", "broadcast",
+                   "transpose", "parameter", "constant",
+                   "get-tuple-element", "tuple", "iota", "slice",
+                   "dynamic-slice", "concatenate", "pad", "reverse"}
+    _FOLDED_OPS = {"convert", "bitcast", "parameter", "constant",
+                   "get-tuple-element", "tuple"}
+
+    def _fusion_kind(self, inst: Instr) -> str:
+        """'folded' = pure dtype-convert (free on TPU: the MXU reads
+        bf16 natively; XLA *CPU* materialises f32 converts before every
+        bf16 dot, which would wildly overstate TPU traffic). 'layout' =
+        data movement only (count result once). 'compute' otherwise."""
+        for c in _called(inst.attrs):
+            ops = {i.opcode for i in self.comps.get(c, [])}
+            if ops <= self._FOLDED_OPS:
+                return "folded"
+            if ops <= self._LAYOUT_OPS:
+                return "layout"
+        return "compute"
+
+    def analyze(self) -> CostReport:
+        rep = CostReport()
+        if self.entry is not None:
+            self._walk(self.entry, 1.0, rep)
+        return rep
+
+    def _walk(self, comp: str, mult: float, rep: CostReport):
+        shapes = self._shape_tables.get(comp, {})
+        for inst in self.comps.get(comp, []):
+            op = inst.opcode
+            if op == "while":
+                trip = _trip_count(inst.attrs)
+                called = _called(inst.attrs)
+                for c in called:  # body and cond
+                    self._walk(c, mult * trip, rep)
+                continue
+            if op in ("fusion", "call", "map"):
+                kind = self._fusion_kind(inst) if op == "fusion" else "compute"
+                for c in _called(inst.attrs):
+                    self._walk_flops_only(c, mult, rep)
+                if kind == "compute":
+                    rep.bytes_accessed += mult * self._io_bytes(inst, shapes)
+                elif kind == "layout":
+                    rep.bytes_accessed += mult * shape_bytes(inst.shape)
+                continue
+            if op == "conditional":
+                for c in _called(inst.attrs):
+                    self._walk(c, mult, rep)  # upper bound: all branches
+                continue
+            self._leaf(inst, shapes, mult, rep)
+
+    def _walk_flops_only(self, comp: str, mult: float, rep: CostReport):
+        """Inside fusions: count flops but not bytes (fused into VMEM)."""
+        shapes = self._shape_tables.get(comp, {})
+        for inst in self.comps.get(comp, []):
+            op = inst.opcode
+            if op in ("fusion", "call", "map", "conditional", "while"):
+                for c in _called(inst.attrs):
+                    self._walk_flops_only(c, mult * _trip_count(inst.attrs), rep)
+                continue
+            self._leaf(inst, shapes, mult, rep, bytes_too=False)
+
+    def _io_bytes(self, inst: Instr, shapes: Dict[str, str]) -> float:
+        """Operand + result bytes, with two slicing-aware conventions:
+
+        * dynamic-update-slice (incl. fused): while-carried caches are
+          updated in place — traffic is ~2× the updated slice, not the
+          whole buffer. We approximate the slice by the smallest
+          non-scalar operand.
+        * any operand ≥8× the result is assumed to be consumed through
+          a (fused) slice/gather — counted as 2× result, not the full
+          tensor. Without this, a scan that slices stacked layer
+          weights appears to re-read all L layers' weights per layer.
+        """
+        res = shape_bytes(inst.shape)
+        ops = [shape_bytes(shapes[o]) for o in inst.operands if o in shapes]
+        if "dynamic-update-slice" in inst.opcode or \
+                "dynamic-update-slice" in inst.name:
+            small = [b for b in ops if 0 < b < res]
+            upd = min(small) if small else res
+            return float(2.0 * upd)
+        total = float(res)
+        for b in ops:
+            total += b if (res == 0 or b < 8 * res) else 2.0 * res
+        return total
+
+    def _leaf(self, inst: Instr, shapes, mult: float, rep: CostReport,
+              *, bytes_too: bool = True):
+        op = inst.opcode
+        base = op.replace("-start", "").replace("-done", "")
+        if base in COLLECTIVES:
+            if op.endswith("-done"):
+                return
+            rep.add_collective(base, mult * shape_bytes(inst.shape))
+            if bytes_too:
+                rep.bytes_accessed += mult * self._io_bytes(inst, shapes)
+            return
+        if op == "dot":
+            rep.flops += mult * _dot_flops(inst, shapes)
+        elif op in ("reduce", "reduce-window"):
+            if inst.operands and inst.operands[0] in shapes:
+                rep.flops += mult * shape_elems(shapes[inst.operands[0]])
+        elif op in _TRANSCENDENTAL:
+            rep.transcendental += mult * shape_elems(inst.shape)
+        elif op in _ELEMENTWISE:
+            rep.flops += mult * shape_elems(inst.shape)
+        if bytes_too and op not in ("parameter", "constant",
+                                    "get-tuple-element", "tuple", "bitcast"):
+            rep.bytes_accessed += mult * self._io_bytes(inst, shapes)
+
+
+def analyze_compiled(compiled) -> CostReport:
+    return HloCost(compiled.as_text()).analyze()

@@ -1,0 +1,164 @@
+"""ShapeDtypeStruct input specs + PartitionSpec trees for every
+(architecture × input shape) — no device allocation anywhere.
+
+``input_specs(cfg, shape_name)`` returns the exact abstract inputs the
+dry-run lowers against:
+  train:   {tokens, labels [B,S] i32, (+frames/patches)}
+  prefill: {tokens [B,S] i32, (+frames/patches)}
+  decode:  {token [B,1] i32, pos scalar i32, state <decode cache>}
+"""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.models import transformer as tf
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def decode_geometry(cfg, shape) -> Tuple[int, Optional[int]]:
+    """(cache_len, window) for a decode shape.
+
+    long_500k uses the sliding-window carve-out for attention layers
+    (DESIGN.md §shape-policy); SSM state is length-free anyway.
+    """
+    if shape.seq_len > 32_768 and cfg.long_context_window:
+        w = cfg.long_context_window
+        return w, w
+    return shape.seq_len, None
+
+
+def frontend_specs(cfg, batch: int) -> Dict:
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.family == "encdec":
+        return {"frames": sds((batch, cfg.encoder_frames, cfg.d_model), dt)}
+    if cfg.family == "vlm":
+        return {"patches": sds((batch, cfg.num_image_tokens, cfg.d_model), dt)}
+    return {}
+
+
+def params_spec(cfg):
+    return jax.eval_shape(
+        lambda k: tf.init_params(cfg, k), jax.random.PRNGKey(0))
+
+
+def decode_state_spec(cfg, batch: int, cache_len: int):
+    p_spec = params_spec(cfg)
+    fe = frontend_specs(cfg, batch)
+
+    def build(params, fe_vals):
+        enc = None
+        if cfg.family == "encdec":
+            enc = tf.encoder_forward(params, cfg, fe_vals["frames"])
+        elif cfg.family == "vlm":
+            enc = fe_vals["patches"]
+        return tf.init_decode_state(params, cfg, batch, cache_len, enc=enc)
+
+    return jax.eval_shape(build, p_spec, fe)
+
+
+def input_specs(cfg, shape_name: str) -> Dict:
+    shape = INPUT_SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        out = {"tokens": sds((B, S), jnp.int32), "labels": sds((B, S), jnp.int32)}
+        out.update(frontend_specs(cfg, B))
+        return out
+    if shape.kind == "prefill":
+        out = {"tokens": sds((B, S), jnp.int32)}
+        out.update(frontend_specs(cfg, B))
+        return out
+    cache_len, _window = decode_geometry(cfg, shape)
+    return {
+        "token": sds((B, 1), jnp.int32),
+        "pos": sds((), jnp.int32),
+        "state": decode_state_spec(cfg, B, cache_len),
+    }
+
+
+# ---------------------------------------------------------------------
+# PartitionSpec trees
+# ---------------------------------------------------------------------
+def batch_pspecs(specs: Dict, rules) -> Dict:
+    b = rules.get("batch")
+    out = {}
+    for k, v in specs.items():
+        out[k] = P(b, *([None] * (len(v.shape) - 1)))
+    return out
+
+
+def _decode_leaf_spec(path: str, ndim: int, rules, shape=(),
+                      model_size: int = 1) -> P:
+    m = rules.get("model")
+    b = rules.get("batch")
+    kv = m if rules.get("shard_kv") else None
+    name = path.split("/")[-1]
+    cross = "cross_kv" in path
+    if name in ("k", "v"):
+        # [.., B, S, KV, hd]: shard KV heads when they divide (they are
+        # head-padded); otherwise shard the SEQUENCE dim — a 2-kv-head
+        # GQA cache left replicated costs 16x the reads AND the sharded
+        # q-heads then induce cache gathers (§Perf pair 3 follow-up).
+        kv_heads = shape[-2] if len(shape) >= 2 else 0
+        if not cross and kv is not None and kv_heads % max(model_size, 1):
+            base = (b, m, None, None)
+        else:
+            base = (b, None, m if cross else kv, None)
+    elif name in ("latent", "k_rope"):
+        # MLA latent has no head dim to shard — shard the SEQUENCE dim
+        # over "model" instead of replicating the cache on every chip
+        # (sequence-parallel decode; XLA inserts the softmax/ctx psums).
+        seq = m if rules.get("mla_seq_shard", True) else None
+        base = (b, seq, None)                         # [B, S, r]
+    elif name == "ssd":
+        base = (b, m, None, None)                     # [B, H, P, N]
+    elif name == "conv":
+        base = (b, None, None)                        # [B, W-1, C]
+    else:
+        base = tuple([None] * ndim)
+    lead = ndim - len(base)
+    return P(*([None] * lead + list(base)))
+
+
+def decode_state_pspecs(state_spec, rules, mesh=None):
+    msize = 1
+    m = rules.get("model")
+    if mesh is not None and m:
+        msize = mesh.shape[m]
+
+    def f(path, leaf):
+        keys = "/".join(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
+        return _decode_leaf_spec(keys, len(leaf.shape), rules,
+                                 shape=tuple(leaf.shape), model_size=msize)
+    return jax.tree_util.tree_map_with_path(f, state_spec)
+
+
+def opt_state_pspecs(param_pspecs_tree, params_spec_tree, cfg, rules,
+                     *, data_axis: str = "data"):
+    """m/v mirror the param specs; with ``cfg.zero1`` each leaf
+    additionally shards its largest not-yet-sharded dim over the data
+    axis (ZeRO-1-style optimizer-state partitioning)."""
+    n_data = rules.get("_data_size", 16)
+
+    def zshard(spec, leaf):
+        if not cfg.zero1 or len(leaf.shape) < 2:
+            return spec
+        parts = list(spec) + [None] * (len(leaf.shape) - len(spec))
+        cands = [(leaf.shape[i], i) for i in range(len(parts))
+                 if parts[i] is None and leaf.shape[i] % n_data == 0
+                 and leaf.shape[i] >= n_data]
+        if cands:
+            _, i = max(cands)
+            parts[i] = data_axis
+        return P(*parts)
+
+    mv = jax.tree.map(zshard, param_pspecs_tree, params_spec_tree)
+    return {"m": mv, "v": mv, "count": P()}

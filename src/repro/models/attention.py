@@ -1,0 +1,410 @@
+"""Attention variants: GQA (full/blockwise + KV-cache decode), sliding
+window, MLA (DeepSeek-V2, with the absorbed decode path over the
+compressed latent), and cross-attention (enc-dec / VLM).
+
+Conventions
+-----------
+* Full-sequence paths take ``x [B, S, d]`` and scalar/vector positions.
+* Decode paths take ``x [B, 1, d]``, a cache pytree and scalar ``pos``
+  (position of the incoming token; the same for every sequence in the
+  batch — continuous batching with ragged positions lives in
+  ``repro.serving`` on top of this).
+* Sliding-window decode uses a ring buffer of size ``window``; keys are
+  RoPE'd at their absolute position when written.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, rope_cos_sin
+from repro.models.sharding import constrain, padded_count
+
+NEG_INF = -1e30
+
+# Full-sequence attention implementation for GQA/MLA/cross paths:
+# "xla_blockwise" (CPU/dry-run default) | "pallas" (TPU) |
+# "pallas_interpret" (kernel body on CPU — tests). The Pallas kernel
+# supports MLA's narrower V width (hd) vs QK width (hd+rd).
+ATTN_IMPL = "xla_blockwise"
+
+
+def _head_padding(H: int, KV: int):
+    """Padded (Hp, KVp) for even model-axis sharding (see
+    sharding.padded_count). KV pads to Hp when grouping breaks (MHA)."""
+    Hp = padded_count(H)
+    KVp = KV if Hp % KV == 0 and (Hp // KV) * KV == Hp else Hp
+    if Hp % KVp != 0:
+        KVp = Hp
+    return Hp, KVp
+
+
+def _pad_heads(w, target: int, axis: int):
+    if w.shape[axis] == target:
+        return w
+    widths = [(0, 0)] * w.ndim
+    widths[axis] = (0, target - w.shape[axis])
+    return jnp.pad(w, widths)
+
+
+# =====================================================================
+# init
+# =====================================================================
+def init_gqa(key, cfg, dtype, *, kv_heads: Optional[int] = None):
+    d, H = cfg.d_model, cfg.num_heads
+    kv = cfg.num_kv_heads if kv_heads is None else kv_heads
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    res_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+    p = {
+        "wq": dense_init(ks[0], (d, H, hd), d, dtype=dtype),
+        "wk": dense_init(ks[1], (d, kv, hd), d, dtype=dtype),
+        "wv": dense_init(ks[2], (d, kv, hd), d, dtype=dtype),
+        "wo": dense_init(ks[3], (H, hd, d), H * hd, scale=res_scale, dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, hd), dtype)
+        p["bk"] = jnp.zeros((kv, hd), dtype)
+        p["bv"] = jnp.zeros((kv, hd), dtype)
+    return p
+
+
+def init_mla(key, cfg, dtype):
+    d, H, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    r, rd = cfg.kv_lora_rank, cfg.qk_rope_dim
+    ks = jax.random.split(key, 6)
+    res_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+    return {
+        "wq": dense_init(ks[0], (d, H, hd + rd), d, dtype=dtype),
+        "w_dkv": dense_init(ks[1], (d, r), d, dtype=dtype),
+        "w_kr": dense_init(ks[2], (d, rd), d, dtype=dtype),
+        "latent_norm": jnp.ones((r,), dtype),
+        "w_kb": dense_init(ks[3], (r, H, hd), r, dtype=dtype),
+        "w_vb": dense_init(ks[4], (r, H, hd), r, dtype=dtype),
+        "wo": dense_init(ks[5], (H, hd, d), H * hd, scale=res_scale, dtype=dtype),
+    }
+
+
+def init_attention(key, cfg, dtype):
+    return init_mla(key, cfg, dtype) if cfg.use_mla else init_gqa(key, cfg, dtype)
+
+
+def init_cross_attention(key, cfg, dtype):
+    # Cross-attention is MHA (kv heads == q heads) over the frontend states.
+    return init_gqa(key, cfg, dtype, kv_heads=cfg.num_heads)
+
+
+# =====================================================================
+# helpers
+# =====================================================================
+def _project_qkv(p, cfg, x, positions, *, rope: bool):
+    """x [B,S,d] -> q [B,S,Hp,hd], k/v [B,S,KVp,hd] (roped if requested).
+
+    Head counts are zero-padded up to the model-axis size so attention
+    shards instead of replicating (exact: wo's padded rows are zero —
+    §Perf measured 16x redundant attention compute for 40-head archs on
+    a 16-way axis without this)."""
+    H = p["wq"].shape[1]
+    KV = p["wk"].shape[1]
+    Hp, KVp = _head_padding(H, KV)
+    wq = _pad_heads(p["wq"], Hp, 1)
+    wk = _pad_heads(p["wk"], KVp, 1)
+    wv = _pad_heads(p["wv"], KVp, 1)
+    # constrain() drops the axis when the dim doesn't divide (e.g. a
+    # 2-kv-head GQA cache stays replicated while 48 padded q-heads shard)
+    wq = constrain(wq, None, "heads", None)
+    wk = constrain(wk, None, "heads", None)
+    wv = constrain(wv, None, "heads", None)
+    q = jnp.einsum("bsd,dhk->bshk", x, wq)
+    k = jnp.einsum("bsd,dhk->bshk", x, wk)
+    v = jnp.einsum("bsd,dhk->bshk", x, wv)
+    if "bq" in p:
+        q = q + _pad_heads(p["bq"], Hp, 0)
+        k = k + _pad_heads(p["bk"], KVp, 0)
+        v = v + _pad_heads(p["bv"], KVp, 0)
+    if rope and cfg.pos_emb == "rope":
+        cos, sin = rope_cos_sin(positions, cfg.head_dim, cfg.rope_theta)
+        cos, sin = cos[:, :, None, :], sin[:, :, None, :]  # [B,S,1,hd/2]
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+    q = constrain(q, "batch", None, "heads", None)
+    k = constrain(k, "batch", None, "heads", None)
+    v = constrain(v, "batch", None, "heads", None)
+    return q, k, v
+
+
+def _axis_size() -> int:
+    from repro.models.sharding import active_mesh, active_rules
+    mesh = active_mesh()
+    m = active_rules().get("model") if mesh is not None else None
+    return mesh.shape[m] if m else 1
+
+
+def _sdpa_blockwise(q, k, v, *, causal: bool, window: Optional[int],
+                    q_offset, block_q: int = 512, block_k: int = 512,
+                    scale: Optional[float] = None):
+    """Online-softmax blockwise attention (flash-attention schedule in XLA).
+
+    q [B,Sq,H,hd]; k/v [B,Sk,KV,hd]; GQA broadcast H over KV.
+    q_offset: absolute position of q[0] minus that of k[0] (for causal
+    masks when Sq != Sk).  Returns [B,Sq,H,hd].
+    """
+    B, Sq, H, hd = q.shape
+    _, Sk, KV, _ = k.shape
+    vd = v.shape[-1]
+    G = H // KV
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    nq = -(-Sq // block_q)
+    nk = -(-Sk // block_k)
+    pad_q = nq * block_q - Sq
+    pad_k = nk * block_k - Sk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+
+    qb = q.reshape(B, nq, block_q, KV, G, hd)
+    kb = k.reshape(B, nk, block_k, KV, hd)
+    vb = v.reshape(B, nk, block_k, KV, vd)
+
+    q_pos = q_offset + jnp.arange(nq * block_q).reshape(nq, block_q)
+    k_pos = jnp.arange(nk * block_k).reshape(nk, block_k)
+    k_valid = (jnp.arange(nk * block_k) < Sk).reshape(nk, block_k)
+
+    def q_block(qi, qblk, qpos):
+        # qblk [B, block_q, KV, G, hd]; qpos [block_q]
+        def kv_step(carry, xs):
+            m, l, acc = carry
+            kblk, vblk, kpos, kval = xs
+            # native-dtype operands, fp32 accumulation (MXU pattern)
+            s = jnp.einsum("bqkgh,bskh->bqkgs", qblk, kblk,
+                           preferred_element_type=jnp.float32) * scale
+            mask = kval[None, None, None, None, :]
+            if causal:
+                mask = mask & (kpos[None, None, None, None, :]
+                               <= qpos[None, :, None, None, None])
+            if window is not None:
+                mask = mask & (qpos[None, :, None, None, None]
+                               - kpos[None, None, None, None, :] < window)
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bqkgs,bskh->bqkgh", p.astype(vblk.dtype), vblk,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc_new), None
+
+        init = (jnp.full((B, block_q, KV, G), NEG_INF, jnp.float32),
+                jnp.zeros((B, block_q, KV, G), jnp.float32),
+                jnp.zeros((B, block_q, KV, G, vd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_step, init, (kb.transpose(1, 0, 2, 3, 4),
+                                                      vb.transpose(1, 0, 2, 3, 4),
+                                                      k_pos, k_valid))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(lambda xs: q_block(*xs),
+                      (jnp.arange(nq), qb.transpose(1, 0, 2, 3, 4, 5), q_pos))
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(B, nq * block_q, H, vd)
+    return out[:, :Sq].astype(v.dtype)
+
+
+# =====================================================================
+# GQA full-sequence (train / prefill)
+# =====================================================================
+def _sdpa(q, k, v, *, causal: bool, window: Optional[int]):
+    """Dispatch full-seq attention to XLA blockwise or the Pallas
+    flash kernel per ``ATTN_IMPL``."""
+    if ATTN_IMPL == "xla_blockwise":
+        return _sdpa_blockwise(q, k, v, causal=causal, window=window,
+                               q_offset=0)
+    from repro.kernels import ops as kops
+    return kops.flash_attention(q, k, v, causal=causal,
+                                window=window or 0, impl=ATTN_IMPL)
+
+
+def gqa_full(p, cfg, x, positions, *, window: Optional[int] = None,
+             causal: bool = True):
+    """x [B,S,d], positions [B,S] -> [B,S,d]."""
+    q, k, v = _project_qkv(p, cfg, x, positions, rope=True)
+    out = _sdpa(q, k, v, causal=causal, window=window)
+    wo = _pad_heads(p["wo"], q.shape[2], 0)  # padded rows are zero: exact
+    return jnp.einsum("bshk,hkd->bsd", out, wo)
+
+
+# =====================================================================
+# GQA decode with KV cache (full or ring/sliding window)
+# =====================================================================
+def gqa_cache_init(cfg, batch: int, cache_len: int, dtype):
+    _, kv = _head_padding(cfg.num_heads, cfg.num_kv_heads)
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((batch, cache_len, kv, hd), dtype),
+        "v": jnp.zeros((batch, cache_len, kv, hd), dtype),
+    }
+
+
+def gqa_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
+    """x [B,1,d]; cache {k,v [B,L,kv,hd]}; pos scalar int32."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=True)
+
+    slot = pos % L if window is not None else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+
+    H, KV, hd = q.shape[2], k.shape[2], cfg.head_dim
+    G = H // KV
+    # bf16 operands + fp32 accumulation (MXU-native); never up-cast the
+    # cache — converting [B,L,kv,hd] to f32 per step dominated decode
+    # HBM traffic in the baseline (EXPERIMENTS.md §Perf).
+    qf = q.reshape(B, KV, G, hd).astype(k.dtype)
+    s = jnp.einsum("bkgh,blkh->bkgl", qf, k,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(hd)
+
+    idx = jnp.arange(L)
+    if window is not None:
+        # slot i holds absolute position p_i = pos - ((pos - i) mod L)
+        p_i = pos - jnp.mod(pos - idx, L)
+        valid = p_i >= 0
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    wo = _pad_heads(p["wo"], H, 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, {"k": k, "v": v}
+
+
+# =====================================================================
+# MLA (DeepSeek-V2)
+# =====================================================================
+def _mla_q(p, cfg, x, positions):
+    H, hd, rd = cfg.num_heads, cfg.head_dim, cfg.qk_rope_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    cos, sin = rope_cos_sin(positions, rd, cfg.rope_theta)
+    q_rope = apply_rope(q_rope, cos[:, :, None, :], sin[:, :, None, :])
+    return q_nope, q_rope
+
+
+def _mla_latent(p, cfg, x, positions):
+    from repro.models.layers import rms_norm
+    latent = rms_norm(x @ p["w_dkv"], p["latent_norm"], cfg.norm_eps)
+    k_rope = x @ p["w_kr"]  # [B,S,rd], shared across heads
+    cos, sin = rope_cos_sin(positions, cfg.qk_rope_dim, cfg.rope_theta)
+    k_rope = apply_rope(k_rope[:, :, None, :], cos[:, :, None, :],
+                        sin[:, :, None, :])[:, :, 0, :]
+    return latent, k_rope
+
+
+def mla_full(p, cfg, x, positions, *, window: Optional[int] = None,
+             causal: bool = True):
+    """Training/prefill path: materialise per-head K/V from the latent."""
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    latent, k_rope = _mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,rhk->bshk", latent, p["w_kb"])
+    v = jnp.einsum("bsr,rhk->bshk", latent, p["w_vb"])
+    H = cfg.num_heads
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                  (*k_rope.shape[:2], H, cfg.qk_rope_dim))],
+        axis=-1)
+    # the default scale 1/sqrt(q.shape[-1]) IS 1/sqrt(hd + rd) here
+    out = _sdpa(q, k, v, causal=causal, window=window)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def mla_cache_init(cfg, batch: int, cache_len: int, dtype):
+    return {
+        "latent": jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
+    """Absorbed decode: attention runs in the r-dim latent space.
+
+    Cache stores only [B,L,r] latents + [B,L,rd] rope keys — the MLA
+    memory win. q_nope is absorbed through w_kb; attention output in
+    latent space is expanded through w_vb.
+    """
+    B = x.shape[0]
+    L = cache["latent"].shape[1]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)       # [B,1,H,hd],[B,1,H,rd]
+    latent_new, k_rope_new = _mla_latent(p, cfg, x, positions)
+
+    slot = pos % L if window is not None else pos
+    latent = jax.lax.dynamic_update_slice(
+        cache["latent"], latent_new.astype(cache["latent"].dtype), (0, slot, 0))
+    k_rope = jax.lax.dynamic_update_slice(
+        cache["k_rope"], k_rope_new.astype(cache["k_rope"].dtype), (0, slot, 0))
+
+    # absorb: q_abs [B,H,r]. bf16 operands + fp32 accumulation; the
+    # latent cache is never up-cast (see §Perf — the f32 convert of the
+    # whole cache per layer was the baseline's dominant traffic).
+    cdt = cache["latent"].dtype
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_kb"],
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,blr->bhl", q_abs.astype(cdt), latent,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhk,blk->bhl", q_rope[:, 0].astype(cdt), k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.head_dim + cfg.qk_rope_dim)
+
+    idx = jnp.arange(L)
+    if window is not None:
+        p_i = pos - jnp.mod(pos - idx, L)
+        valid = p_i >= 0
+    else:
+        valid = idx <= pos
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", w.astype(cdt), latent,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhk->bhk", ctx.astype(p["w_vb"].dtype), p["w_vb"],
+                     preferred_element_type=jnp.float32)
+    out = out[:, None].astype(x.dtype)  # [B,1,H,hd]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+# =====================================================================
+# Cross-attention (enc-dec, VLM)
+# =====================================================================
+def cross_kv(p, enc):
+    """Precompute K/V over frontend states enc [B,T,d]."""
+    k = jnp.einsum("btd,dhk->bthk", enc, p["wk"])
+    v = jnp.einsum("btd,dhk->bthk", enc, p["wv"])
+    if "bk" in p:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    return {"k": k, "v": v}
+
+
+def cross_attend(p, cfg, x, kv):
+    """x [B,S,d] queries attend over precomputed kv (no mask)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if "bq" in p:
+        q = q + p["bq"]
+    out = _sdpa(q, kv["k"], kv["v"], causal=False, window=None)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])

@@ -1,0 +1,134 @@
+"""Shared low-level layers: norms, MLPs, positions, init, chunked loss."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- init
+def dense_init(key, shape, in_dim: Optional[int] = None, scale: float = 1.0,
+               dtype=jnp.float32):
+    """Truncated-normal fan-in init (stddev = scale / sqrt(in_dim))."""
+    if in_dim is None:
+        in_dim = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale / math.sqrt(max(in_dim, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------- norms
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    out = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ------------------------------------------------------------ positions
+def sinusoidal_positions(positions, dim: int, max_timescale: float = 10_000.0):
+    """positions [...,] int -> [..., dim] float32 sinusoidal embedding."""
+    half = dim // 2
+    freq = jnp.exp(-math.log(max_timescale) * jnp.arange(half, dtype=jnp.float32)
+                   / max(half - 1, 1))
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def rope_cos_sin(positions, head_dim: int, theta: float):
+    """positions [...] -> cos,sin of shape [..., head_dim//2]."""
+    half = head_dim // 2
+    freq = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x [..., H, head_dim]; cos/sin broadcastable to [..., 1, head_dim//2].
+
+    Uses the 'split-half' (rotate_half) convention.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    cos = cos.astype(jnp.float32)
+    sin = sin.astype(jnp.float32)
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ----------------------------------------------------------------- MLPs
+def init_swiglu(key, d_model: int, d_ff: int, n_layers: int, dtype):
+    k1, k2, k3 = jax.random.split(key, 3)
+    res_scale = 1.0 / math.sqrt(2 * max(n_layers, 1))
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), d_model, dtype=dtype),
+        "w3": dense_init(k2, (d_model, d_ff), d_model, dtype=dtype),
+        "w2": dense_init(k3, (d_ff, d_model), d_ff, scale=res_scale, dtype=dtype),
+    }
+
+
+def swiglu(params, x):
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]
+
+
+def init_gelu_mlp(key, d_model: int, d_ff: int, n_layers: int, dtype):
+    k1, k2 = jax.random.split(key)
+    res_scale = 1.0 / math.sqrt(2 * max(n_layers, 1))
+    return {
+        "w1": dense_init(k1, (d_model, d_ff), d_model, dtype=dtype),
+        "b1": jnp.zeros((d_ff,), dtype),
+        "w2": dense_init(k2, (d_ff, d_model), d_ff, scale=res_scale, dtype=dtype),
+        "b2": jnp.zeros((d_model,), dtype),
+    }
+
+
+def gelu_mlp(params, x):
+    h = jax.nn.gelu(x @ params["w1"] + params["b1"], approximate=True)
+    return h @ params["w2"] + params["b2"]
+
+
+# ------------------------------------------------------------- the loss
+def chunked_softmax_xent(hidden, unembed, labels, *, chunk: int = 512,
+                         norm_w=None, eps: float = 1e-5):
+    """Cross entropy over the vocab without materialising [B,S,V].
+
+    hidden: [B, S, d]  (pre-final-norm if norm_w given)
+    unembed: [d, V]
+    labels: [B, S] int32
+    Scans over sequence chunks; returns mean xent (fp32 scalar).
+    """
+    B, S, d = hidden.shape
+    n_chunks = max(S // chunk, 1)
+    chunk = S // n_chunks
+    hs = hidden.reshape(B, n_chunks, chunk, d).transpose(1, 0, 2, 3)
+    ls = labels.reshape(B, n_chunks, chunk).transpose(1, 0, 2)
+
+    def body(carry, xs):
+        h, lab = xs
+        if norm_w is not None:
+            h = rms_norm(h, norm_w, eps)
+        logits = (h @ unembed).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        picked = jnp.take_along_axis(logits, lab[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - picked), None
+
+    total, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), (hs, ls))
+    return total / (B * S)

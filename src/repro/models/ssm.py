@@ -1,0 +1,161 @@
+"""Mamba2 / SSD (state-space duality) mixer. [arXiv:2405.21060]
+
+Full-sequence path uses the chunked SSD algorithm (quadratic within a
+chunk, linear scan across chunks); decode is the O(1)-per-token state
+recurrence. Single B/C group (ngroups=1).
+
+State layout:
+  ssd_state  [B, H, P, N]   (H = heads, P = headdim, N = ssm_state)
+  conv_state [B, W-1, di + 2N]
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, rms_norm
+
+# "xla" (oracle, CPU/dry-run default) | "pallas" (TPU) |
+# "pallas_interpret" (kernel body on CPU, tests)
+SSD_CHUNK_IMPL = "xla"
+
+
+def init_ssm(key, cfg, dtype):
+    d = cfg.d_model
+    di = cfg.d_inner
+    N = cfg.ssm_state
+    H = cfg.ssm_nheads
+    W = cfg.ssm_conv_width
+    conv_dim = di + 2 * N
+    ks = jax.random.split(key, 5)
+    res_scale = 1.0 / math.sqrt(2 * cfg.num_layers)
+
+    # inverse softplus of dt uniformly in [1e-3, 1e-1]
+    dt = jnp.exp(jax.random.uniform(ks[0], (H,), jnp.float32,
+                                    math.log(1e-3), math.log(1e-1)))
+    dt_bias = dt + jnp.log(-jnp.expm1(-dt))
+
+    kz, kx, kt = jax.random.split(ks[1], 3)
+    return {
+        # three separate projections instead of one fused [d, 2di+2N+H]:
+        # slicing a fused model-sharded output at non-shard-aligned
+        # offsets cost ~0.7 s/step of collective-permute halo exchanges
+        # on mamba2 prefill (EXPERIMENTS.md §Perf pair 4)
+        "in_z": dense_init(kz, (d, di), d, dtype=dtype),
+        "in_xbc": dense_init(kx, (d, di + 2 * N), d, dtype=dtype),
+        "in_dt": dense_init(kt, (d, H), d, dtype=dtype),
+        "conv_w": (jax.random.normal(ks[2], (W, conv_dim), jnp.float32)
+                   * (1.0 / math.sqrt(W))).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jax.random.uniform(ks[3], (H,), jnp.float32, 1.0, 16.0)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": dt_bias,
+        "norm": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[4], (di, d), di, scale=res_scale, dtype=dtype),
+    }
+
+
+def _split_proj(p, cfg, x):
+    return x @ p["in_z"], x @ p["in_xbc"], x @ p["in_dt"]
+
+
+def _conv_full(p, xBC):
+    """Causal depthwise conv over [B, L, C]."""
+    W = p["conv_w"].shape[0]
+    pad = jnp.pad(xBC, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xBC.shape[1], :] * p["conv_w"][i] for i in range(W))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def ssd_full(p, cfg, x):
+    """x [B, L, d] -> y [B, L, d]; L must be a multiple of cfg.ssm_chunk
+    (callers pad). Chunked SSD with an inter-chunk lax.scan."""
+    B, L, d = x.shape
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    Q = min(cfg.ssm_chunk, L)
+    assert L % Q == 0, (L, Q)
+    nC = L // Q
+
+    z, xBC, dt = _split_proj(p, cfg, x)
+    xBC = _conv_full(p, xBC)
+    xs = xBC[..., :di].reshape(B, L, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,L,H]
+    A = -jnp.exp(p["A_log"])                                          # [H]
+    dA = dt * A                                                       # [B,L,H]
+    xw = xs.astype(jnp.float32) * dt[..., None]                       # [B,L,H,P]
+
+    # chunked views, chunk-major for scan
+    def chunked(t, shape):
+        return t.reshape(B, nC, Q, *shape).transpose(1, 0, 2, *range(3, 3 + len(shape)))
+
+    dA_c = chunked(dA, (H,))
+    xw_c = chunked(xw, (H, P))
+    B_c = chunked(Bm.astype(jnp.float32), (N,))
+    C_c = chunked(Cm.astype(jnp.float32), (N,))
+
+    def body(S, xs_c):
+        dAq, xwq, Bq, Cq = xs_c  # [B,Q,H], [B,Q,H,P], [B,Q,N], [B,Q,N]
+        # intra-chunk + chunk state: Pallas kernel on TPU (decay tiles
+        # stay in VMEM), exact jnp oracle under XLA (CPU/dry-run)
+        from repro.kernels import ops as kops
+        y_intra, S_chunk = kops.ssd_chunk(dAq, xwq, Bq, Cq,
+                                          impl=SSD_CHUNK_IMPL)
+        cum = jnp.cumsum(dAq.astype(jnp.float32), axis=1)   # [B,Q,H]
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bin,bhpn,bih->bihp", Cq.astype(jnp.float32),
+                             S, jnp.exp(cum))
+        S_new = jnp.exp(cum[:, -1])[:, :, None, None] * S + S_chunk
+        return S_new, y_intra + y_inter
+
+    S0 = jnp.zeros((B, H, P, N), jnp.float32)
+    _, y = jax.lax.scan(body, S0, (dA_c, xw_c, B_c, C_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(B, L, H, P)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, L, di).astype(x.dtype)
+
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+def ssm_state_init(cfg, batch: int, dtype):
+    di, N = cfg.d_inner, cfg.ssm_state
+    H, P, W = cfg.ssm_nheads, cfg.ssm_headdim, cfg.ssm_conv_width
+    return {
+        "ssd": jnp.zeros((batch, H, P, N), jnp.float32),
+        "conv": jnp.zeros((batch, W - 1, di + 2 * N), dtype),
+    }
+
+
+def ssd_decode(p, cfg, x, state):
+    """x [B,1,d]; O(1) recurrent step. Returns (y [B,1,d], new_state)."""
+    B = x.shape[0]
+    di, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_nheads, cfg.ssm_headdim
+    z, xBC, dt = _split_proj(p, cfg, x[:, 0, :])
+
+    # conv ring: window = [conv_state ; xBC]
+    win = jnp.concatenate([state["conv"], xBC[:, None, :].astype(state["conv"].dtype)],
+                          axis=1)                       # [B, W, C]
+    conv_out = jnp.einsum("bwc,wc->bc", win.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32))
+    xBC = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = win[:, 1:, :]
+
+    xs = xBC[..., :di].reshape(B, H, P)
+    Bm = xBC[..., di:di + N]
+    Cm = xBC[..., di + N:]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dt * -jnp.exp(p["A_log"]))                       # [B,H]
+    xw = xs * dt[..., None]                                      # [B,H,P]
+
+    S = state["ssd"] * a[:, :, None, None] + jnp.einsum("bhp,bn->bhpn", xw, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm) + p["D"][None, :, None] * xs
+    y = y.reshape(B, di).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = (y @ p["out_proj"])[:, None, :]
+    return y, {"ssd": S, "conv": new_conv}

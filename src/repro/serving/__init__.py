@@ -1,0 +1,5 @@
+from repro.serving.engine import ServingEngine
+from repro.serving.offload_serving import OffloadServer
+from repro.serving.sampler import sample_token
+
+__all__ = ["ServingEngine", "OffloadServer", "sample_token"]

@@ -1,0 +1,80 @@
+"""Batched on-device serving engine (static batching).
+
+Standard prefill-then-decode loop over the substrate's ``decode_step``;
+this is the non-offloaded comparison point and the thing the
+distributed ``serve_step`` dry-runs lower. Request scheduling is static
+batching with per-sequence completion masks (enough for the benchmark
+workloads; continuous batching is out of scope for the paper).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import transformer as tf
+from repro.serving.sampler import sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServingEngine:
+    def __init__(self, params, cfg, *, cache_len: int = 512,
+                 eos_id: Optional[int] = None, moe_path: str = "auto",
+                 window: Optional[int] = None):
+        self.params = params
+        self.cfg = cfg
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.window = window
+        self._step = jax.jit(
+            lambda p, s, t, pos: tf.decode_step(p, cfg, s, t, pos,
+                                                window=window,
+                                                moe_path=moe_path))
+
+    def generate_batch(self, prompts: Sequence[Sequence[int]], *,
+                       max_new: int, temperature: float = 0.0,
+                       top_p: float = 1.0, seed: int = 0,
+                       enc=None) -> List[List[int]]:
+        """Left-aligned static batch; all prompts padded to equal length
+        with token 0 (prompts here are synthetic; a real deployment
+        would left-pad + mask)."""
+        B = len(prompts)
+        plen = max(len(p) for p in prompts)
+        prompts = [list(p) + [0] * (plen - len(p)) for p in prompts]
+        toks = jnp.asarray(prompts, jnp.int32)
+
+        state = tf.init_decode_state(self.params, self.cfg, B, self.cache_len,
+                                     enc=enc)
+        key = jax.random.PRNGKey(seed)
+        logits = None
+        for i in range(plen):
+            logits, state = self._step(self.params, state, toks[:, i:i + 1],
+                                       jnp.int32(i))
+        outs: List[List[int]] = [[] for _ in range(B)]
+        done = np.zeros(B, bool)
+        cur = None
+        for j in range(max_new):
+            key, sub = jax.random.split(key)
+            nxt = sample_token(sub, logits, temperature=temperature,
+                               top_p=top_p)
+            for b in range(B):
+                if not done[b]:
+                    t = int(nxt[b])
+                    outs[b].append(t)
+                    if self.eos_id is not None and t == self.eos_id:
+                        done[b] = True
+            if done.all():
+                break
+            logits, state = self._step(self.params, state, nxt[:, None],
+                                       jnp.int32(plen + j))
+        return outs

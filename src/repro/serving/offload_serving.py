@@ -1,0 +1,37 @@
+"""Offload-mode serving — the paper's deployment scenario as a
+first-class server object.
+
+Wraps ``repro.core.OffloadEngine`` with a prompt-level API and exposes
+the trace/stats of each completed request, which is exactly the
+interface the paper's analysis needed (and its figures are drawn from).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.costmodel import HardwareProfile
+from repro.core.offload_engine import OffloadEngine
+from repro.core.trace import TraceRecorder
+
+
+class OffloadServer:
+    def __init__(self, params, cfg, *, cache_slots: int, policy: str = "lru",
+                 prefetch: Optional[str] = None, quant: str = "none",
+                 hw: Optional[HardwareProfile] = None, overlap: bool = False):
+        self.cfg = cfg
+        self.trace = TraceRecorder()
+        self.engine = OffloadEngine(
+            params, cfg, cache_slots=cache_slots, policy=policy,
+            prefetch=prefetch, quant=quant, hw=hw, overlap=overlap,
+            trace=self.trace)
+
+    def complete(self, prompt: Sequence[int], *, max_new: int,
+                 temperature: float = 0.0, seed: int = 0) -> List[int]:
+        return self.engine.generate(list(prompt), max_new,
+                                    temperature=temperature, seed=seed)
+
+    def stats(self) -> Dict[str, float]:
+        return self.engine.stats()
+
+    def render_trace(self, layer: int, **kw) -> str:
+        return self.trace.render_layer(layer, self.cfg.num_experts, **kw)

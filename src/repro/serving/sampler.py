@@ -1,0 +1,23 @@
+"""Token sampling: greedy / temperature / top-p (the paper uses
+temperature+top_p at 0.9 for MMLU and 0.1 for the speed benchmark)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def sample_token(key, logits, *, temperature: float = 0.0,
+                 top_p: float = 1.0) -> jnp.ndarray:
+    """logits [B, V] -> token ids [B]."""
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    logits = logits / temperature
+    if top_p < 1.0:
+        sorted_logits = jnp.sort(logits, axis=-1)[:, ::-1]
+        probs = jax.nn.softmax(sorted_logits, axis=-1)
+        cum = jnp.cumsum(probs, axis=-1)
+        # smallest set with cumulative prob >= top_p
+        cutoff_idx = jnp.sum(cum < top_p, axis=-1, keepdims=True)
+        cutoff = jnp.take_along_axis(sorted_logits, cutoff_idx, axis=-1)
+        logits = jnp.where(logits < cutoff, -jnp.inf, logits)
+    return jax.random.categorical(key, logits, axis=-1).astype(jnp.int32)

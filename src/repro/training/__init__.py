@@ -1,0 +1,7 @@
+from repro.training.checkpoint import load_checkpoint, save_checkpoint
+from repro.training.optimizer import (adamw_init, adamw_update,
+                                      cosine_schedule)
+from repro.training.train_loop import make_train_step, train
+
+__all__ = ["adamw_init", "adamw_update", "cosine_schedule",
+           "make_train_step", "train", "save_checkpoint", "load_checkpoint"]

@@ -1,0 +1,64 @@
+"""Training loop: jitted step factory + a small driver.
+
+The same ``make_train_step`` is used by the CPU examples (tiny configs)
+and the multi-pod dry-run (full configs lowered with in/out shardings —
+see ``repro.launch.dryrun``).
+"""
+from __future__ import annotations
+
+import time
+from functools import partial
+from typing import Callable, Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import transformer as tf
+from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
+                                      cosine_schedule)
+
+
+def make_train_step(cfg, *, opt_cfg: Optional[AdamWConfig] = None,
+                    schedule: Optional[Callable] = None,
+                    moe_path: str = "auto", remat: bool = True):
+    opt_cfg = opt_cfg or AdamWConfig()
+    schedule = schedule or (lambda s: 1.0)
+
+    def step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(
+            lambda p: tf.loss_fn(p, cfg, batch, moe_path=moe_path, remat=remat)
+        )(params)
+        lr_scale = schedule(opt_state["count"])
+        params, opt_state = adamw_update(grads, opt_state, params,
+                                         cfg=opt_cfg, lr_scale=lr_scale)
+        return params, opt_state, loss
+
+    return step
+
+
+def train(cfg, batches: Iterator[Dict], *, steps: int,
+          params=None, seed: int = 0, opt_cfg: Optional[AdamWConfig] = None,
+          log_every: int = 20, moe_path: str = "auto",
+          callback: Optional[Callable] = None):
+    """Single-host training driver. Returns (params, losses)."""
+    if params is None:
+        params = tf.init_params(cfg, jax.random.PRNGKey(seed))
+    opt_state = adamw_init(params)
+    opt_cfg = opt_cfg or AdamWConfig()
+    sched = cosine_schedule(warmup=max(min(100, steps // 10), 1), total=steps)
+    step_fn = jax.jit(make_train_step(cfg, opt_cfg=opt_cfg, schedule=sched,
+                                      moe_path=moe_path))
+    losses = []
+    t0 = time.time()
+    for i, batch in enumerate(batches):
+        if i >= steps:
+            break
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        params, opt_state, loss = step_fn(params, opt_state, batch)
+        losses.append(float(loss))
+        if log_every and (i % log_every == 0 or i == steps - 1):
+            dt = time.time() - t0
+            print(f"step {i:5d}  loss {losses[-1]:.4f}  ({dt:.1f}s)")
+        if callback is not None:
+            callback(i, params, losses[-1])
+    return params, losses

@@ -1,0 +1,25 @@
+import os
+import sys
+
+# src layout import path (tests also run without `pip install -e .`)
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+
+
+def tiny(arch: str, **kw) -> "ModelConfig":
+    """Reduced fp32 config for fast CPU tests."""
+    defaults = dict(layers=2, d_model=64, experts=4, vocab=128)
+    defaults.update(kw)
+    cfg = reduced(get_config(arch), **defaults)
+    return dataclasses.replace(cfg, dtype="float32")
+
+
+@pytest.fixture(scope="session")
+def rng_key():
+    return jax.random.PRNGKey(0)

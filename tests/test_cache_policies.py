@@ -1,0 +1,144 @@
+"""Unit + property tests for the cache policies (paper §3.1/§4.2)."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_policies import (LFU, LRU, AgedLFU, Belady, FIFO, LRFU,
+                                       POLICIES, RandomPolicy, make_policy)
+
+
+def run_trace(policy, accesses):
+    """Drive a policy through an access sequence; returns hit count."""
+    hits = 0
+    for key in accesses:
+        if policy.contains(key):
+            hits += 1
+            policy.on_access(key)
+        else:
+            if policy.full:
+                victim = policy.choose_victim()
+                policy.remove(victim)
+            policy.on_insert(key)
+        if isinstance(policy, Belady):
+            policy.advance()
+        policy.tick()
+    return hits
+
+
+# ----------------------------------------------------------- unit tests
+def test_lru_evicts_least_recent():
+    p = LRU(2)
+    p.on_insert("a"); p.on_insert("b")
+    p.on_access("a")                      # b is now LRU
+    assert p.choose_victim() == "b"
+
+
+def test_lfu_evicts_least_frequent():
+    p = LFU(3)
+    for k, n in [("a", 5), ("b", 2), ("c", 9)]:
+        p.on_insert(k)
+        for _ in range(n - 1):
+            p.on_access(k)
+    assert p.choose_victim() == "b"
+
+
+def test_lfu_counts_persist_across_eviction():
+    # the paper's LFU: popularity is workload-level, not cache-level
+    p = LFU(1)
+    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.remove("a")
+    p.on_insert("b")
+    assert p._freq["a"] == 3
+
+
+def test_aged_lfu_lets_stale_popular_keys_go():
+    # paper §6.1: pure LFU makes popular experts unevictable
+    p = AgedLFU(2, decay=0.5, age_every=1)
+    p.on_insert("hot")
+    for _ in range(10):
+        p.on_access("hot"); p.tick()
+    p.on_insert("new")
+    for _ in range(8):
+        p.tick()                          # hot's count decays to ~0.01
+    p.on_access("new"); p.tick()
+    assert p.choose_victim() == "hot"
+
+
+def test_exclude_pins_keys():
+    for name in POLICIES:
+        p = make_policy(name, 2)
+        p.on_insert(1); p.on_insert(2)
+        v = p.choose_victim(frozenset([1]))
+        assert v == 2, name
+        with pytest.raises(RuntimeError):
+            p.choose_victim(frozenset([1, 2]))
+
+
+def test_belady_picks_farthest_future():
+    fut = ["a", "b", "a", "c", "b", "a"]
+    p = Belady(2, fut)
+    p.on_insert("a"); p.on_insert("b")
+    p.advance(2)                          # cursor at index 2
+    # next use: a@2, b@4 -> evict b
+    assert p.choose_victim() == "b"
+
+
+def test_belady_key_never_used_again():
+    p = Belady(2, ["a", "b", "a", "a"])
+    p.on_insert("a"); p.on_insert("b")
+    p.advance(2)
+    assert p.choose_victim() == "b"       # b never used again
+
+
+# ------------------------------------------------------- property tests
+keys = st.integers(min_value=0, max_value=15)
+traces = st.lists(keys, min_size=1, max_size=300)
+caps = st.integers(min_value=1, max_value=8)
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, cap=caps, name=st.sampled_from(sorted(POLICIES)))
+def test_capacity_invariant(trace, cap, name):
+    p = make_policy(name, cap)
+    run_trace(p, trace)
+    assert len(p) <= cap
+    assert len(set(p.keys())) == len(p.keys())  # no duplicates
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, cap=caps, name=st.sampled_from(sorted(POLICIES)))
+def test_hits_only_when_cached(trace, cap, name):
+    """Replaying with an independent shadow set must agree on hits."""
+    p = make_policy(name, cap)
+    shadow = set()
+    for key in trace:
+        assert p.contains(key) == (key in shadow)
+        if p.contains(key):
+            p.on_access(key)
+        else:
+            if p.full:
+                v = p.choose_victim()
+                p.remove(v)
+                shadow.discard(v)
+            p.on_insert(key)
+            shadow.add(key)
+        p.tick()
+
+
+@settings(max_examples=40, deadline=None)
+@given(trace=traces, cap=caps)
+def test_belady_is_optimal(trace, cap):
+    """The clairvoyant policy's hit count upper-bounds every online one."""
+    belady_hits = run_trace(Belady(cap, trace), trace)
+    for name in POLICIES:
+        online = run_trace(make_policy(name, cap), trace)
+        assert online <= belady_hits, name
+
+
+@settings(max_examples=30, deadline=None)
+@given(trace=traces, cap=caps)
+def test_full_capacity_cache_never_misses_twice(trace, cap):
+    """With capacity >= distinct keys, each key misses exactly once."""
+    distinct = len(set(trace))
+    p = LRU(max(cap, distinct))
+    hits = run_trace(p, trace)
+    assert hits == len(trace) - distinct

@@ -1,0 +1,75 @@
+"""Property tests on the device cache tier itself: under ANY access/
+prefetch interleaving, (1) capacity and slot-consistency invariants
+hold, (2) gathered weights are bit-identical to the store's (the system
+invariant behind 'caching never changes outputs')."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cache_policies import make_policy
+from repro.core.expert_cache import ExpertCache
+from repro.core.expert_store import ExpertStore
+
+E, D, F = 6, 4, 5
+
+
+def make_cache(policy_name: str, slots: int):
+    store = ExpertStore()
+    rng = np.random.default_rng(0)
+    weights = {}
+    for e in range(E):
+        w = {"w1": rng.normal(size=(D, F)).astype(np.float32),
+             "w3": rng.normal(size=(D, F)).astype(np.float32),
+             "w2": rng.normal(size=(F, D)).astype(np.float32)}
+        store.put((0, e), w)
+        weights[e] = w
+    cache = ExpertCache(0, slots, make_policy(policy_name, slots), store,
+                        {"w1": (D, F), "w3": (D, F), "w2": (F, D)})
+    return cache, weights
+
+
+events = st.lists(
+    st.tuples(st.sampled_from(["access", "prefetch"]),
+              st.lists(st.integers(0, E - 1), min_size=1, max_size=3,
+                       unique=True)),
+    min_size=1, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(evs=events, policy=st.sampled_from(["lru", "lfu", "aged-lfu"]),
+       slots=st.integers(3, E))
+def test_cache_invariants_and_gather_exactness(evs, policy, slots):
+    cache, weights = make_cache(policy, slots)
+    for kind, ids in evs:
+        if kind == "access":
+            hits, misses, evicted = cache.access(ids)
+            assert set(hits) | set(misses) == set(ids)
+            assert not (set(hits) & set(misses))
+        else:
+            cache.prefetch(ids)
+        # invariants
+        assert len(cache.slot_of) <= cache.n_slots
+        assert len(set(cache.slot_of.values())) == len(cache.slot_of)
+        assert set(cache.slot_of) == set(cache.policy.keys())
+        # accessed ids must now be resident with exact weights
+        if kind == "access":
+            got = cache.gather(ids)
+            for j, e in enumerate(ids):
+                for k in ("w1", "w3", "w2"):
+                    np.testing.assert_array_equal(
+                        np.asarray(got[k][j]), weights[e][k])
+
+
+@settings(max_examples=15, deadline=None)
+@given(evs=events)
+def test_bytes_transferred_counts_misses_and_prefetches(evs):
+    cache, _ = make_cache("lru", 3)
+    per_expert = cache.store.expert_nbytes((0, 0))
+    moves = 0
+    for kind, ids in evs:
+        if kind == "access":
+            _, misses, _ = cache.access(ids)
+            moves += len(misses)
+        else:
+            moves += len(cache.prefetch(ids))
+    assert cache.bytes_transferred == moves * per_expert

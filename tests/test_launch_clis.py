@@ -1,0 +1,45 @@
+"""Smoke tests for the launcher CLIs (subprocess, reduced configs)."""
+import os
+import subprocess
+import sys
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _run(args, timeout=600):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    return subprocess.run([sys.executable, "-m"] + args, env=env,
+                          capture_output=True, text=True, timeout=timeout)
+
+
+def test_train_cli(tmp_path):
+    ck = os.path.join(tmp_path, "ck.npz")
+    r = _run(["repro.launch.train", "--arch", "qwen1.5-0.5b", "--reduced",
+              "--steps", "3", "--batch", "2", "--seq", "32", "--ckpt", ck])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "final loss" in r.stdout
+    assert os.path.exists(ck)
+
+
+def test_serve_cli_offload():
+    r = _run(["repro.launch.serve", "--arch", "mixtral-8x7b",
+              "--policy", "lfu", "--cache-slots", "4", "--tokens", "4",
+              "--layers", "2", "--d-model", "64"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "hit_rate" in r.stdout
+
+
+def test_serve_cli_device_mode():
+    r = _run(["repro.launch.serve", "--arch", "qwen2.5-3b",
+              "--mode", "device", "--tokens", "4", "--layers", "2",
+              "--d-model", "64"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "tokens:" in r.stdout
+
+
+def test_dryrun_cli_single_case():
+    r = _run(["repro.launch.dryrun", "--arch", "qwen1.5-0.5b",
+              "--shape", "decode_32k"])
+    assert r.returncode == 0, r.stderr[-2000:]
+    assert "1 ok, 0 failed" in r.stdout

@@ -1,0 +1,206 @@
+"""Mathematical consistency of the model substrate: decode == full
+forward, MoE paths agree, SSD decode == SSD scan, MLA absorbed decode ==
+explicit full path, sliding window masks."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.models import attention as attn
+from repro.models import moe as moe_lib
+from repro.models import ssm as ssm_lib
+from repro.models import transformer as tf
+
+from conftest import tiny
+
+TOKENS = [3, 17, 42, 5, 99, 7, 23, 56]
+
+
+def decode_all(params, cfg, tokens, cache_len, window=None, enc=None,
+               moe_path="auto"):
+    state = tf.init_decode_state(params, cfg, 1, cache_len, enc=enc)
+    logits = None
+    for i, t in enumerate(tokens):
+        logits, state = tf.decode_step(params, cfg, state,
+                                       jnp.asarray([[t]], jnp.int32),
+                                       jnp.int32(i), window=window,
+                                       moe_path=moe_path)
+    return logits
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "starcoder2-3b",
+                                  "mixtral-8x7b", "mamba2-2.7b",
+                                  "jamba-1.5-large-398b", "deepseek-v2-236b"])
+def test_decode_matches_full_forward(arch):
+    """Token-by-token decode must reproduce the full forward's
+    last-position logits (KV caches, SSD state, MLA latents all agree)."""
+    cfg = tiny(arch)
+    if cfg.ssm_chunk:
+        cfg = dataclasses.replace(cfg, ssm_chunk=4)
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    toks = jnp.asarray([TOKENS], jnp.int32)
+    want = tf.prefill(params, cfg, toks, moe_path="dense")
+    got = decode_all(params, cfg, TOKENS, len(TOKENS), moe_path="dense")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_encdec_decode_matches_forward():
+    cfg = tiny("whisper-tiny")
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    frames = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, cfg.encoder_frames, cfg.d_model)), jnp.float32)
+    enc = tf.encoder_forward(params, cfg, frames)
+    toks = jnp.asarray([TOKENS], jnp.int32)
+    want = tf.prefill(params, cfg, toks, enc=enc)
+    got = decode_all(params, cfg, TOKENS, len(TOKENS), enc=enc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_vlm_decode_matches_forward():
+    cfg = tiny("llama-3.2-vision-11b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(1))
+    patches = jnp.asarray(np.random.default_rng(0).normal(
+        size=(1, cfg.num_image_tokens, cfg.d_model)), jnp.float32)
+    toks = jnp.asarray([TOKENS], jnp.int32)
+    want = tf.prefill(params, cfg, toks, enc=patches)
+    got = decode_all(params, cfg, TOKENS, len(TOKENS), enc=patches)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+def test_sliding_window_ring_cache_matches_windowed_forward():
+    """Decode through a ring buffer smaller than the sequence ==
+    full-sequence forward with the same window mask."""
+    cfg = tiny("qwen2.5-3b")
+    params = tf.init_params(cfg, jax.random.PRNGKey(2))
+    W = 4
+    toks = list(range(1, 11))
+    h, _ = tf.forward(params, cfg, jnp.asarray([toks], jnp.int32), window=W)
+    want = tf.logits_from_hidden(params, cfg, h[:, -1:, :])[:, 0]
+    got = decode_all(params, cfg, toks, W, window=W)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)
+
+
+# ------------------------------------------------------------- MoE paths
+def test_moe_capacity_matches_dense_with_ample_capacity():
+    cfg = tiny("mixtral-8x7b")
+    p = moe_lib.init_moe(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(2, 16, cfg.d_model)),
+                    jnp.float32)
+    y_dense, _ = moe_lib.moe_dense(p, cfg, x)
+    y_cap, _ = moe_lib.moe_capacity(p, cfg, x, capacity_factor=8.0)
+    np.testing.assert_allclose(np.asarray(y_cap), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_gather_matches_dense():
+    cfg = tiny("deepseek-v2-236b")  # shared experts too
+    p = moe_lib.init_moe(jax.random.PRNGKey(4), cfg, jnp.float32)
+    x = jnp.asarray(np.random.default_rng(0).normal(size=(1, 1, cfg.d_model)),
+                    jnp.float32)
+    y_dense, _ = moe_lib.moe_dense(p, cfg, x)
+    y_gather, _ = moe_lib.moe_gather(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(y_gather), np.asarray(y_dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_overflow():
+    cfg = tiny("mixtral-8x7b")
+    p = moe_lib.init_moe(jax.random.PRNGKey(3), cfg, jnp.float32)
+    x = jnp.ones((4, 16, cfg.d_model), jnp.float32)
+    # capacity ~1/8 of demand: most tokens dropped, output much smaller
+    y_small, _ = moe_lib.moe_capacity(p, cfg, x, capacity_factor=0.1)
+    y_full, _ = moe_lib.moe_capacity(p, cfg, x, capacity_factor=8.0)
+    assert float(jnp.abs(y_small).mean()) < float(jnp.abs(y_full).mean())
+
+
+def test_load_balance_loss_uniform_is_one():
+    E = 8
+    logits = jnp.zeros((64, E))
+    ids = jnp.tile(jnp.arange(E), 8)[:64, None]
+    assert moe_lib.load_balance_loss(logits, ids, E) == pytest.approx(1.0, rel=1e-3)
+
+
+# ------------------------------------------------------------------ SSD
+def test_ssd_decode_matches_chunked_scan():
+    cfg = tiny("mamba2-2.7b")
+    cfg = dataclasses.replace(cfg, ssm_chunk=4)
+    p = ssm_lib.init_ssm(jax.random.PRNGKey(5), cfg, jnp.float32)
+    L = 12
+    x = jnp.asarray(np.random.default_rng(1).normal(size=(2, L, cfg.d_model)),
+                    jnp.float32) * 0.3
+    y_full = ssm_lib.ssd_full(p, cfg, x)
+    state = ssm_lib.ssm_state_init(cfg, 2, jnp.float32)
+    outs = []
+    for t in range(L):
+        y, state = ssm_lib.ssd_decode(p, cfg, x[:, t:t + 1, :], state)
+        outs.append(y)
+    y_step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_full),
+                               rtol=2e-3, atol=2e-3)
+
+
+# ------------------------------------------------------------------ MLA
+def test_mla_absorbed_decode_matches_explicit_full():
+    cfg = tiny("deepseek-v2-236b")
+    p = attn.init_mla(jax.random.PRNGKey(6), cfg, jnp.float32)
+    L = 6
+    x = jnp.asarray(np.random.default_rng(2).normal(size=(1, L, cfg.d_model)),
+                    jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(L)[None], (1, L))
+    want = attn.mla_full(p, cfg, x, pos)
+    cache = attn.mla_cache_init(cfg, 1, L, jnp.float32)
+    outs = []
+    for t in range(L):
+        y, cache = attn.mla_decode(p, cfg, x[:, t:t + 1, :], cache, t)
+        outs.append(y)
+    got = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_rope_rotation_preserves_norm_and_relativity():
+    from repro.models.layers import apply_rope, rope_cos_sin
+    x = jnp.asarray(np.random.default_rng(3).normal(size=(1, 4, 2, 64)),
+                    jnp.float32)
+    cos, sin = rope_cos_sin(jnp.arange(4)[None], 64, 1e4)
+    xr = apply_rope(x, cos[:, :, None], sin[:, :, None])
+    np.testing.assert_allclose(np.linalg.norm(np.asarray(xr), axis=-1),
+                               np.linalg.norm(np.asarray(x), axis=-1),
+                               rtol=1e-5)
+    # dot(q_i, k_j) depends only on i-j
+    q = k = x
+    qr = apply_rope(q, cos[:, :, None], sin[:, :, None])
+    kr = apply_rope(k, cos[:, :, None], sin[:, :, None])
+    d01 = float(jnp.vdot(qr[0, 1, 0], kr[0, 0, 0]))
+    d12 = float(jnp.vdot(qr[0, 2, 0], kr[0, 1, 0]))
+    # same relative offset, same underlying vectors? only if x equal at
+    # those positions — use constant x instead:
+    xc = jnp.ones((1, 4, 1, 64), jnp.float32)
+    qc = apply_rope(xc, cos[:, :, None], sin[:, :, None])
+    d01 = float(jnp.vdot(qc[0, 1, 0], qc[0, 0, 0]))
+    d12 = float(jnp.vdot(qc[0, 2, 0], qc[0, 1, 0]))
+    assert d01 == pytest.approx(d12, rel=1e-5)
+
+
+def test_hybrid_ring_window_decode_matches_windowed_forward():
+    """Jamba-style hybrid decode through a ring KV buffer smaller than
+    the sequence (the long_500k configuration) == full forward with the
+    same window mask (SSM state is window-free)."""
+    cfg = tiny("jamba-1.5-large-398b")
+    cfg = dataclasses.replace(cfg, ssm_chunk=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(3))
+    W = 4
+    toks = list(range(1, 11))
+    h, _ = tf.forward(params, cfg, jnp.asarray([toks], jnp.int32), window=W,
+                      moe_path="dense")
+    want = tf.logits_from_hidden(params, cfg, h[:, -1:, :])[:, 0]
+    got = decode_all(params, cfg, toks, W, window=W, moe_path="dense")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=3e-3, atol=3e-3)

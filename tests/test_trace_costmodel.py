@@ -1,0 +1,92 @@
+"""Trace statistics + cost-model tests (paper Tables 1-2, §5.4)."""
+import math
+
+import pytest
+
+from repro.configs import get_config
+from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
+from repro.core.trace import TraceRecorder
+
+
+def mk(prompt=0, token=0, layer=0, act=(0, 1), cached=(1, 2), guess=()):
+    return dict(prompt_id=prompt, token_idx=token, layer=layer,
+                activated=act, gate_weights=tuple(1.0 for _ in act),
+                cache_before=cached, cache_after=cached,
+                hits=tuple(set(act) & set(cached)),
+                misses=tuple(set(act) - set(cached)),
+                evicted=(), spec_guess=guess, prefetched=())
+
+
+def test_cache_precision_recall_definitions():
+    tr = TraceRecorder()
+    tr.record(**mk(act=(0, 1), cached=(1, 2, 3)))
+    prec, rec = tr.cache_precision_recall()
+    assert prec == pytest.approx(1 / 3)   # |{1}| / |cached|
+    assert rec == pytest.approx(1 / 2)    # |{1}| / |activated|
+
+
+def test_spec_precision_equals_recall_for_topk_guesses():
+    """Paper §5.4: |guess| == |activated| => FP == FN => P == R."""
+    tr = TraceRecorder()
+    tr.record(**mk(layer=1, act=(0, 1), guess=(1, 2)))
+    tr.record(**mk(layer=2, act=(3, 4), guess=(3, 4)))
+    tr.record(**mk(layer=3, act=(5, 6), guess=(0, 7)))
+    p, r = tr.spec_precision_recall()
+    assert p == pytest.approx(r)
+    assert p == pytest.approx(3 / 6)
+
+
+def test_spec_skips_first_layer():
+    tr = TraceRecorder()
+    tr.record(**mk(layer=0, act=(0, 1), guess=(2, 3)))  # unguessable layer
+    tr.record(**mk(layer=1, act=(0, 1), guess=(0, 1)))
+    p, r = tr.spec_precision_recall()
+    assert p == r == 1.0
+
+
+def test_expert_histogram_and_locality():
+    tr = TraceRecorder()
+    tr.record(**mk(token=0, act=(0, 1)))
+    tr.record(**mk(token=1, act=(1, 2)))
+    tr.record(**mk(token=2, act=(1, 3)))
+    assert tr.expert_histogram(0, 4) == [1, 3, 1, 1]
+    # token1 shares {1} with token0 (of 2); token2 shares {1} with token1
+    assert tr.temporal_locality() == pytest.approx(2 / 4)
+
+
+def test_trace_json_roundtrip():
+    tr = TraceRecorder()
+    tr.record(**mk())
+    tr2 = TraceRecorder.from_json(tr.to_json())
+    assert tr2.steps == tr.steps
+
+
+# ----------------------------------------------------------- cost model
+def test_peak_memory_linear_in_offloads():
+    """Table 1: peak memory drops ~linearly, ~2 GB per extra offload for
+    Mixtral-8x7B at its quantisation (our bytes use the configured
+    expert size)."""
+    cfg = get_config("mixtral-8x7b")
+    mb = ModelBytes.from_config(cfg, expert_dtype_bytes=2.0)
+    cm = CostModel(HardwareProfile.a6000_pcie4(), mb)
+    mems = [cm.peak_memory_bytes(k) for k in (4, 5, 6)]
+    d1 = mems[0] - mems[1]
+    d2 = mems[1] - mems[2]
+    assert d1 == d2 == cfg.num_layers * mb.expert_bytes  # exactly linear
+    # slope per offload = L * expert_bytes ≈ 32 * 2 * 3*4096*14336 B ≈ 11 GB
+    # at bf16; the paper's 2 GB slope is at ~2.3-bit HQQ:
+    mb2 = ModelBytes.from_config(cfg, expert_dtype_bytes=0.35)
+    assert cfg.num_layers * mb2.expert_bytes == pytest.approx(2e9, rel=0.25)
+
+
+def test_more_misses_is_slower_and_overlap_helps():
+    cfg = get_config("mixtral-8x7b")
+    mb = ModelBytes.from_config(cfg)
+    cm = CostModel(HardwareProfile.a6000_pcie4(), mb, overlap=False)
+    t0 = cm.token_latency(0.0)
+    t1 = cm.token_latency(1.0)
+    assert t1 > t0
+    lat_no = cm.token_latency(0.2, prefetch_per_layer=2.0)
+    cm_ov = CostModel(HardwareProfile.a6000_pcie4(), mb, overlap=True)
+    lat_ov = cm_ov.token_latency(0.2, prefetch_per_layer=2.0)
+    assert lat_ov < lat_no
