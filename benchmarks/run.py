@@ -15,10 +15,12 @@ def main() -> None:
                             bench_beyond_paper, bench_cache_policies,
                             bench_expert_distribution, bench_kernels,
                             bench_offload_sweep, bench_roofline,
-                            bench_speculative, bench_traces)
+                            bench_serving_offload, bench_speculative,
+                            bench_traces)
 
     suite = [
         ("table1_offload_sweep", bench_offload_sweep.run),
+        ("serving_offload_batched", bench_serving_offload.run),
         ("table2_cache_policies", bench_cache_policies.run),
         ("fig13_14_speculative", bench_speculative.run),
         ("fig7_expert_distribution", bench_expert_distribution.run),

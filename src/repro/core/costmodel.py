@@ -146,3 +146,43 @@ class CostModel:
 
     def tokens_per_second(self, misses_per_layer: float, **kw) -> float:
         return 1.0 / self.token_latency(misses_per_layer, **kw)
+
+    # ------------------------------------------------ batched serving
+    def expected_union_experts(self, batch: int) -> float:
+        """Expected DISTINCT experts per layer for a batch of tokens
+        routing independently: E * (1 - (1 - k/E)^B).
+
+        This is why misses amortize under batching — B co-scheduled
+        tokens demand the union of their top-k sets, which grows
+        sublinearly in B — and simultaneously why per-request hit rates
+        degrade: the working set competing for the same slots grows.
+        """
+        E, k = self.mb.num_experts, self.mb.top_k
+        return E * (1.0 - (1.0 - k / E) ** max(batch, 0))
+
+    def expected_amortization(self, batch: int) -> float:
+        """Fraction of naive per-token expert demand that survives
+        unioning (1.0 at B=1, ->E/(B*k) as the union saturates)."""
+        naive = max(batch, 1) * self.mb.top_k
+        return self.expected_union_experts(batch) / naive
+
+    def step_latency(self, union_misses_per_layer: float,
+                     prefetch_per_layer: float = 0.0,
+                     batch: int = 1) -> float:
+        """Seconds for ONE decode step serving ``batch`` tokens.
+
+        ``union_misses_per_layer`` are demand fetches for the batch's
+        UNIONED working set (each missing expert is transferred once and
+        shared by every request that routed to it); compute scales with
+        ``batch`` inside ``layer_compute_time``. Per-token latency is
+        this divided by the number of active requests — the continuous
+        batching throughput win the serving benchmarks sweep.
+        """
+        return self.token_latency(union_misses_per_layer,
+                                  prefetch_per_layer=prefetch_per_layer,
+                                  batch=batch)
+
+    def batched_tokens_per_second(self, union_misses_per_layer: float,
+                                  batch: int = 1, **kw) -> float:
+        return batch / self.step_latency(union_misses_per_layer,
+                                         batch=batch, **kw)

@@ -87,6 +87,7 @@ class OffloadEngine:
                               overlap=overlap)
         self.sim_time = 0.0
         self.tokens_done = 0
+        self._steps_done = 0
         self.spec = SpeculativePrefetcher(cfg) if prefetch == "spec" else None
         self.markov = (MarkovPredictor(cfg.num_layers, cfg.num_experts,
                                        cfg.num_experts_per_tok)
@@ -105,8 +106,24 @@ class OffloadEngine:
         ]
         return {"layers": layers}
 
-    def new_prompt(self):
+    def new_prompt(self, *, reset_context: bool = True) -> int:
+        """Allocate a fresh prompt (request) id.
+
+        ``reset_context=False`` keeps the Markov-prefetch context — the
+        continuous server admits requests while others are mid-decode,
+        and the layer-to-layer activation stream it predicts from is a
+        shared-batch property, not a per-request one.
+        """
         self._prompt_id += 1
+        if reset_context:
+            self.reset_prefetch_context()
+        return self._prompt_id
+
+    def reset_prefetch_context(self) -> None:
+        """Forget the previous step's activations (Markov predictor
+        input). The continuous server calls this when it goes idle so a
+        request admitted to an empty batch sees the same prefetch state
+        as a fresh ``generate`` call."""
         self._prev_acts = {}
 
     # ------------------------------------------------------------------
@@ -120,17 +137,31 @@ class OffloadEngine:
         probs = top / top.sum(axis=-1, keepdims=True)
         return ids, probs
 
-    def _moe_offloaded(self, p_l, layer: int, h, token_idx: int,
+    def _moe_offloaded(self, p_l, layer: int, h,
                        pending_guess: Tuple[int, ...],
-                       pending_moved: Tuple[int, ...] = ()):
+                       pending_moved: Tuple[int, ...],
+                       prompt_ids: Sequence[int],
+                       token_indices: Sequence[int],
+                       active: Sequence[bool]):
+        """Batch-union MoE FFN over the shared per-layer cache.
+
+        Inactive rows (free serving slots) route but contribute nothing:
+        their experts never join the union and their combine weights are
+        exactly zero, so active rows' outputs are independent of batch
+        composition. The trace records the union access plus per-request
+        attribution for each active row.
+        """
         cfg = self.cfg
         x = rms_norm(h, p_l["ln2"], cfg.norm_eps)
         ids, probs = self._route(p_l, x)   # [B,k]
         B = ids.shape[0]
 
-        # union of needed experts, most-weighted first (deterministic)
+        # union of needed experts over ACTIVE rows, most-weighted first
+        # (deterministic; insertion order breaks weight ties)
         weight_by_e: Dict[int, float] = {}
         for b in range(B):
+            if not active[b]:
+                continue
             for j in range(ids.shape[1]):
                 e = int(ids[b, j])
                 weight_by_e[e] = weight_by_e.get(e, 0.0) + float(probs[b, j])
@@ -155,6 +186,8 @@ class OffloadEngine:
             comb = np.zeros((B, len(chunk)), np.float32)
             col = {e: i for i, e in enumerate(chunk)}
             for b in range(B):
+                if not active[b]:
+                    continue
                 for j in range(ids.shape[1]):
                     e = int(ids[b, j])
                     if e in col:
@@ -167,43 +200,89 @@ class OffloadEngine:
             xs = x
             h = h + ((jax.nn.silu(xs @ s["w1"]) * (xs @ s["w3"])) @ s["w2"])
 
+        # per-request attribution (slice of the union)
+        req_ids = tuple(int(prompt_ids[b]) for b in range(B) if active[b])
+        req_tok = tuple(int(token_indices[b]) for b in range(B) if active[b])
+        req_act = tuple(tuple(sorted(int(e) for e in ids[b]))
+                        for b in range(B) if active[b])
+        # legacy single-stream fields: exact when the step serves one
+        # request (or several rows of one), sentinel otherwise
+        pid = req_ids[0] if len(set(req_ids)) == 1 else -1
+        tok = req_tok[0] if len(set(req_tok)) == 1 else self._steps_done
+
         acts = tuple(int(e) for e in union)
         self.trace.record(
-            prompt_id=self._prompt_id, token_idx=token_idx, layer=layer,
+            prompt_id=pid, token_idx=tok, layer=layer,
             activated=acts,
             gate_weights=tuple(float(weight_by_e[e]) for e in union),
             cache_before=cache_before, cache_after=cache.cached_ids(),
             hits=tuple(hits), misses=tuple(misses), evicted=tuple(evicted),
-            spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved))
+            spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved),
+            request_ids=req_ids, request_token_idx=req_tok,
+            request_activated=req_act)
         return h, acts, len(misses)
 
     # ------------------------------------------------------------------
     def decode_token(self, state, token, pos: int, token_idx: int):
-        """token [B,1] int32. Returns (logits [B,V], state)."""
+        """token [B,1] int32, all rows at the same position (the paper's
+        single-stream setting). Returns (logits [B,V], state)."""
+        B = token.shape[0]
+        return self.decode_tokens(state, token,
+                                  positions=[int(pos)] * B,
+                                  token_indices=[int(token_idx)] * B)
+
+    def decode_tokens(self, state, tokens, positions: Sequence[int],
+                      token_indices: Optional[Sequence[int]] = None, *,
+                      prompt_ids: Optional[Sequence[int]] = None,
+                      active: Optional[Sequence[bool]] = None):
+        """True B>1 decode over the shared per-layer expert caches.
+
+        tokens [B,1] int32; ``positions[b]`` is row b's sequence position
+        (rows may be staggered — continuous batching), ``token_indices[b]``
+        its token index within its request — defaults to ``positions``,
+        from which it only diverges once KV slots stop starting at
+        position 0 (paged KV) — ``prompt_ids[b]`` its request
+        id for trace attribution. ``active[b]=False`` marks a free
+        serving slot: the row is decoded (static shapes) but routed
+        nowhere, attends only to its own slot's KV rows, and is excluded
+        from the union access, the trace, and the simulated clock.
+        Returns (logits [B,V], state).
+        """
         cfg = self.cfg
         params = self.params
-        B = token.shape[0]
-        h = params["embed"][token]
+        B = tokens.shape[0]
+        if token_indices is None:
+            token_indices = positions
+        if prompt_ids is None:
+            prompt_ids = [self._prompt_id] * B
+        if active is None:
+            active = [True] * B
+        n_active = sum(1 for a in active if a)
+        assert n_active >= 1, "decode step with no active rows"
+        pos_vec = jnp.asarray(list(positions), jnp.int32)
+
+        h = params["embed"][tokens]
         if cfg.pos_emb == "sinusoidal":
-            p2 = jnp.full((B, 1), pos, jnp.int32)
-            h = h + sinusoidal_positions(p2, cfg.d_model).astype(h.dtype)
+            h = h + sinusoidal_positions(pos_vec[:, None],
+                                         cfg.d_model).astype(h.dtype)
 
         # guesses issued at layer l are consumed at layer l+1 of the SAME
         # token pass (the prefetch travels ahead of the compute wavefront)
         pending: Dict[int, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {}
         step_misses = 0
         step_prefetch = 0
+        act_rows = np.asarray([b for b in range(B) if active[b]], np.int32)
 
         for l in range(cfg.num_layers):
             p_l = _layer_slice(params["layers"], l)
-            h, state["layers"][l] = tf._attn_decode(
-                p_l, cfg, h, state["layers"][l], jnp.int32(pos), None)
+            h, state["layers"][l] = tf._attn_decode_multipos(
+                p_l, cfg, h, state["layers"][l], pos_vec)
 
             # --- speculative guess for layer l+1 (paper §3.2) ---------
             guess: Tuple[int, ...] = ()
             if self.spec is not None and l + 1 < cfg.num_layers:
                 p_next = _layer_slice(params["layers"], l + 1)
-                guess = self.spec.guess(h, p_next["ln2"],
+                guess = self.spec.guess(h[act_rows], p_next["ln2"],
                                         p_next["moe"]["router"])
                 moved = self.caches[l + 1].prefetch(guess)
                 step_prefetch += len(moved)
@@ -217,7 +296,8 @@ class OffloadEngine:
                     pending[l + 1] = (guess, tuple(moved))
 
             pg, pm = pending.get(l, ((), ()))
-            h, acts, misses = self._moe_offloaded(p_l, l, h, token_idx, pg, pm)
+            h, acts, misses = self._moe_offloaded(
+                p_l, l, h, pg, pm, prompt_ids, token_indices, active)
             step_misses += misses
             if self.markov is not None and l > 0:
                 self.markov.update(l - 1, self._prev_acts.get(l - 1, ()), acts)
@@ -225,12 +305,14 @@ class OffloadEngine:
 
         logits = tf.logits_from_hidden(params, cfg, h)[:, 0]
 
-        # simulated clock (per token)
-        self.sim_time += self.cost.token_latency(
-            misses_per_layer=step_misses / cfg.num_layers,
+        # simulated clock: one step serves n_active tokens; misses are
+        # already batch-union counts (amortization is emergent)
+        self.sim_time += self.cost.step_latency(
+            step_misses / cfg.num_layers,
             prefetch_per_layer=step_prefetch / cfg.num_layers,
-            batch=B)
-        self.tokens_done += 1
+            batch=n_active)
+        self.tokens_done += n_active
+        self._steps_done += 1
         return logits, state
 
     # ------------------------------------------------------------------
@@ -274,6 +356,7 @@ class OffloadEngine:
             "cache_precision": prec, "cache_recall": rec,
             "spec_precision": sp, "spec_recall": sr,
             "bytes_transferred": sum(c.bytes_transferred for c in self.caches),
+            "decode_steps": self._steps_done,
             "sim_time_s": self.sim_time,
             "sim_tokens_per_s": self.tokens_done / self.sim_time
             if self.sim_time else 0.0,

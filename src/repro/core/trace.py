@@ -35,6 +35,20 @@ class StepTrace:
     evicted: Tuple[int, ...]
     spec_guess: Tuple[int, ...] = ()        # speculative guesses for THIS layer
     prefetched: Tuple[int, ...] = ()        # experts actually pre-admitted
+    # --- batched serving attribution (one entry per active request) ---
+    # ``activated``/``hits``/``misses`` above describe the BATCH-UNION
+    # access against the shared cache; these slice it back per request.
+    request_ids: Tuple[int, ...] = ()
+    request_token_idx: Tuple[int, ...] = ()
+    request_activated: Tuple[Tuple[int, ...], ...] = ()
+
+    def request_rows(self):
+        """Per-request (prompt_id, token_idx, activated) views of this
+        step; single-request traces fall back to the legacy fields."""
+        if self.request_ids:
+            return list(zip(self.request_ids, self.request_token_idx,
+                            self.request_activated))
+        return [(self.prompt_id, self.token_idx, self.activated)]
 
 
 class TraceRecorder:
@@ -90,6 +104,57 @@ class TraceRecorder:
         rec = tp / (tp + fn) if (tp + fn) else 0.0
         return prec, rec
 
+    # ----------------------------------------------- per-request slicing
+    def request_ids(self) -> List[int]:
+        """All request (prompt) ids observed, in first-seen order."""
+        seen: List[int] = []
+        for s in self.steps:
+            for rid, _, _ in s.request_rows():
+                if rid not in seen:
+                    seen.append(rid)
+        return seen
+
+    def request_steps(self, prompt_id: int
+                      ) -> List[Tuple[int, int, Tuple[int, ...], "StepTrace"]]:
+        """This request's (token_idx, layer, activated, union_step) rows,
+        sliced out of the shared-batch trace, in decode order."""
+        rows = []
+        for s in self.steps:
+            for rid, tok, acts in s.request_rows():
+                if rid == prompt_id:
+                    rows.append((tok, s.layer, tuple(acts), s))
+        rows.sort(key=lambda r: (r[0], r[1]))
+        return rows
+
+    def request_stats(self, prompt_id: int) -> Dict[str, float]:
+        """Per-request cache accounting over the shared cache.
+
+        An expert this request activates counts as a hit if the shared
+        batch access found it resident (``s.hits``), a miss otherwise —
+        so one demand transfer shared by two co-batched requests counts
+        as a hit-equivalent for neither and a miss for both (contention
+        view), while precision/recall keep the paper's pre-update-cache
+        definitions restricted to this request's activations.
+        """
+        hits = misses = 0
+        tp = n_cached = n_act = 0
+        n_tokens = set()
+        for tok, _, acts, s in self.request_steps(prompt_id):
+            a = set(acts)
+            hits += len(a & set(s.hits))
+            misses += len(a & set(s.misses))
+            tp += len(a & set(s.cache_before))
+            n_cached += len(s.cache_before)
+            n_act += len(a)
+            n_tokens.add(tok)
+        return {
+            "hits": hits, "misses": misses,
+            "hit_rate": hits / max(hits + misses, 1),
+            "precision": tp / max(n_cached, 1),
+            "recall": tp / max(n_act, 1),
+            "tokens": len(n_tokens),
+        }
+
     def expert_histogram(self, layer: int, num_experts: int) -> List[int]:
         c = Counter()
         for s in self.steps:
@@ -113,7 +178,8 @@ class TraceRecorder:
         statistic the baseline's caching exploits."""
         by_tok: Dict[Tuple[int, int, int], set] = {}
         for s in self.steps:
-            by_tok[(s.prompt_id, s.layer, s.token_idx)] = set(s.activated)
+            for rid, tok, acts in s.request_rows():
+                by_tok[(rid, s.layer, tok)] = set(acts)
         num = den = 0
         for (pid, lay, tok), acts in by_tok.items():
             if layer is not None and lay != layer:
@@ -132,22 +198,24 @@ class TraceRecorder:
         """ASCII analogue of the paper's Fig 2-6/8-12: rows = experts,
         cols = tokens; '#'=activated+cached (hit), 'O'=activated only
         (miss), '.'=cached only ("miscached"), ' '=neither."""
-        if prompt_id is None:
-            pids = [s.prompt_id for s in self.steps if s.layer == layer]
-            prompt_id = pids[0] if pids else 0
-        toks = sorted({s.token_idx for s in self.steps
-                       if s.layer == layer and s.prompt_id == prompt_id})
-        toks = toks[:max_tokens]
-        grid = [[" "] * len(toks) for _ in range(num_experts)]
+        rows = []  # (token_idx, activated, cache_before) for one request
         for s in self.steps:
-            if s.layer != layer or s.prompt_id != prompt_id:
+            if s.layer != layer:
                 continue
-            if s.token_idx not in toks:
+            for rid, tok, acts in s.request_rows():
+                rows.append((rid, tok, acts, s.cache_before))
+        if prompt_id is None:
+            prompt_id = rows[0][0] if rows else 0
+        rows = [(t, a, cb) for rid, t, a, cb in rows if rid == prompt_id]
+        toks = sorted({t for t, _, _ in rows})[:max_tokens]
+        grid = [[" "] * len(toks) for _ in range(num_experts)]
+        for tok, acts, cache_before in rows:
+            if tok not in toks:
                 continue
-            col = toks.index(s.token_idx)
+            col = toks.index(tok)
             for e in range(num_experts):
-                act = e in s.activated
-                cached = e in s.cache_before
+                act = e in acts
+                cached = e in cache_before
                 grid[e][col] = "#" if act and cached else (
                     "O" if act else ("." if cached else " "))
         lines = [f"layer {layer}  ('#'=hit 'O'=miss '.'=miscached)"]
@@ -160,8 +228,10 @@ class TraceRecorder:
 
     @classmethod
     def from_json(cls, s: str) -> "TraceRecorder":
+        def detuple(v):
+            return tuple(detuple(x) for x in v) if isinstance(v, list) else v
+
         tr = cls()
         for d in json.loads(s):
-            d = {k: tuple(v) if isinstance(v, list) else v for k, v in d.items()}
-            tr.steps.append(StepTrace(**d))
+            tr.steps.append(StepTrace(**{k: detuple(v) for k, v in d.items()}))
         return tr

@@ -256,11 +256,15 @@ def gqa_cache_init(cfg, batch: int, cache_len: int, dtype):
 def gqa_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
     """x [B,1,d]; cache {k,v [B,L,kv,hd]}; pos scalar int32."""
     B = x.shape[0]
+    if window is None:
+        # full cache: one shared core with the continuous-batching path
+        return gqa_decode_multipos(p, cfg, x, cache,
+                                   jnp.full((B,), pos, jnp.int32))
     L = cache["k"].shape[1]
     positions = jnp.full((B, 1), pos, jnp.int32)
     q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=True)
 
-    slot = pos % L if window is not None else pos
+    slot = pos % L
     k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
                                      (0, slot, 0, 0))
     v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
@@ -277,13 +281,53 @@ def gqa_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
     s = s / math.sqrt(hd)
 
     idx = jnp.arange(L)
-    if window is not None:
-        # slot i holds absolute position p_i = pos - ((pos - i) mod L)
-        p_i = pos - jnp.mod(pos - idx, L)
-        valid = p_i >= 0
-    else:
-        valid = idx <= pos
+    # slot i holds absolute position p_i = pos - ((pos - i) mod L)
+    p_i = pos - jnp.mod(pos - idx, L)
+    valid = p_i >= 0
     s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", w.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    wo = _pad_heads(p["wo"], H, 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, {"k": k, "v": v}
+
+
+def gqa_decode_multipos(p, cfg, x, cache, pos_vec):
+    """Decode with a PER-ROW position vector (continuous batching).
+
+    x [B,1,d]; cache {k,v [B,L,kv,hd]}; pos_vec [B] int32 — row b writes
+    its K/V at slot pos_vec[b] and attends to slots <= pos_vec[b]. This
+    is also the shared full-cache core of ``gqa_decode`` (which passes a
+    broadcast scalar position), so single-stream and batched serving
+    stay bit-compatible by construction. Sliding windows are not
+    supported here (ring-buffer slots need the scalar-pos path).
+    bf16 operands + fp32 accumulation; the cache is never up-cast (the
+    per-step f32 convert dominated decode HBM traffic — EXPERIMENTS.md).
+    """
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    positions = jnp.reshape(pos_vec, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=True)
+
+    # per-row scatter: row b's new K/V lands at slot pos_vec[b] (an
+    # in-place XLA scatter, not a full-cache select)
+    rows = jnp.arange(B)
+    k = cache["k"].at[rows, positions[:, 0]].set(
+        k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[rows, positions[:, 0]].set(
+        v_new[:, 0].astype(cache["v"].dtype))
+
+    H, KV, hd = q.shape[2], k.shape[2], cfg.head_dim
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(k.dtype)
+    s = jnp.einsum("bkgh,blkh->bkgl", qf, k,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(hd)
+
+    valid = jnp.arange(L)[None, :] <= positions  # [B, L]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     out = jnp.einsum("bkgl,blkh->bkgh", w.astype(v.dtype), v,
                      preferred_element_type=jnp.float32)
@@ -348,12 +392,16 @@ def mla_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
     latent space is expanded through w_vb.
     """
     B = x.shape[0]
+    if window is None:
+        # full cache: one shared core with the continuous-batching path
+        return mla_decode_multipos(p, cfg, x, cache,
+                                   jnp.full((B,), pos, jnp.int32))
     L = cache["latent"].shape[1]
     positions = jnp.full((B, 1), pos, jnp.int32)
     q_nope, q_rope = _mla_q(p, cfg, x, positions)       # [B,1,H,hd],[B,1,H,rd]
     latent_new, k_rope_new = _mla_latent(p, cfg, x, positions)
 
-    slot = pos % L if window is not None else pos
+    slot = pos % L
     latent = jax.lax.dynamic_update_slice(
         cache["latent"], latent_new.astype(cache["latent"].dtype), (0, slot, 0))
     k_rope = jax.lax.dynamic_update_slice(
@@ -372,12 +420,47 @@ def mla_decode(p, cfg, x, cache, pos, *, window: Optional[int] = None):
     s = s / math.sqrt(cfg.head_dim + cfg.qk_rope_dim)
 
     idx = jnp.arange(L)
-    if window is not None:
-        p_i = pos - jnp.mod(pos - idx, L)
-        valid = p_i >= 0
-    else:
-        valid = idx <= pos
+    p_i = pos - jnp.mod(pos - idx, L)
+    valid = p_i >= 0
     s = jnp.where(valid[None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", w.astype(cdt), latent,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhk->bhk", ctx.astype(p["w_vb"].dtype), p["w_vb"],
+                     preferred_element_type=jnp.float32)
+    out = out[:, None].astype(x.dtype)  # [B,1,H,hd]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+def mla_decode_multipos(p, cfg, x, cache, pos_vec):
+    """Absorbed MLA decode with a per-row position vector [B] (see
+    ``gqa_decode_multipos`` for the contract). Also the shared
+    full-cache core of ``mla_decode``; windows stay on the scalar-pos
+    ring-buffer path."""
+    B = x.shape[0]
+    L = cache["latent"].shape[1]
+    positions = jnp.reshape(pos_vec, (B, 1)).astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    latent_new, k_rope_new = _mla_latent(p, cfg, x, positions)
+
+    rows = jnp.arange(B)
+    latent = cache["latent"].at[rows, positions[:, 0]].set(
+        latent_new[:, 0].astype(cache["latent"].dtype))
+    k_rope = cache["k_rope"].at[rows, positions[:, 0]].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    cdt = cache["latent"].dtype
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_kb"],
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,blr->bhl", q_abs.astype(cdt), latent,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhk,blk->bhl", q_rope[:, 0].astype(cdt), k_rope,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.head_dim + cfg.qk_rope_dim)
+
+    valid = jnp.arange(L)[None, :] <= positions  # [B, L]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhl,blr->bhr", w.astype(cdt), latent,
                      preferred_element_type=jnp.float32)

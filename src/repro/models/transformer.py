@@ -357,6 +357,16 @@ def _attn_decode(p, cfg, h, cache, pos, window):
     return h + y, cache
 
 
+def _attn_decode_multipos(p, cfg, h, cache, pos_vec):
+    """Per-row-position decode (continuous batching): pos_vec [B]."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        y, cache = attn.mla_decode_multipos(p["attn"], cfg, x, cache, pos_vec)
+    else:
+        y, cache = attn.gqa_decode_multipos(p["attn"], cfg, x, cache, pos_vec)
+    return h + y, cache
+
+
 def _block_decode(p, cfg, h, cache, pos, *, kind, window, cross_kv, moe_path):
     if kind == "attn":
         h, cache = _attn_decode(p, cfg, h, cache, pos, window)

@@ -1,5 +1,7 @@
 from repro.serving.engine import ServingEngine
-from repro.serving.offload_serving import OffloadServer
-from repro.serving.sampler import sample_token
+from repro.serving.offload_serving import ContinuousOffloadServer, OffloadServer
+from repro.serving.request import Request
+from repro.serving.sampler import request_key, sample_token
 
-__all__ = ["ServingEngine", "OffloadServer", "sample_token"]
+__all__ = ["ServingEngine", "ContinuousOffloadServer", "OffloadServer",
+           "Request", "request_key", "sample_token"]

@@ -4,11 +4,11 @@ Standard prefill-then-decode loop over the substrate's ``decode_step``;
 this is the non-offloaded comparison point and the thing the
 distributed ``serve_step`` dry-runs lower. Request scheduling is static
 batching with per-sequence completion masks (enough for the benchmark
-workloads; continuous batching is out of scope for the paper).
+workloads; the offload path has true continuous batching — see
+``repro.serving.offload_serving.ContinuousOffloadServer``).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import List, Optional, Sequence
 
 import jax
@@ -16,15 +16,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tf
+from repro.serving.request import Request  # noqa: F401  (re-export)
 from repro.serving.sampler import sample_token
-
-
-@dataclasses.dataclass
-class Request:
-    prompt: List[int]
-    max_new: int
-    out: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
 
 
 class ServingEngine:

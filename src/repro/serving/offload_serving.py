@@ -1,37 +1,242 @@
 """Offload-mode serving — the paper's deployment scenario as a
-first-class server object.
+first-class server object, now with continuous batching.
 
-Wraps ``repro.core.OffloadEngine`` with a prompt-level API and exposes
-the trace/stats of each completed request, which is exactly the
-interface the paper's analysis needed (and its figures are drawn from).
+``ContinuousOffloadServer`` schedules many requests over ONE
+``OffloadEngine`` and its shared per-layer expert caches: a request
+queue, slot-based admission at token boundaries (a joining request's
+prompt tokens stream through the same batched decode other requests are
+mid-generation in), per-request EOS/max_new retirement, and per-request
+stats sliced out of the shared ``TraceRecorder``. This is where the
+paper's batch-1 analysis changes character: co-scheduled tokens demand
+the UNION of their expert sets (misses amortize) while competing for
+the same cache slots (per-request hit rates fall) — see
+``CostModel.expected_union_experts`` and docs/serving.md.
+
+``OffloadServer`` keeps the original one-request-at-a-time API and is a
+thin wrapper over a ``max_batch=1`` continuous server; batch-of-1
+continuous serving reproduces ``OffloadEngine.generate`` token for
+token at temperature 0 (test-enforced, stats included). Sampled
+decoding (T>0) draws from per-(seed, token) PRNG keys
+(``sampler.request_key``) instead of ``generate``'s sequential
+key-split stream: same-seed draws differ from the legacy path, in
+exchange for outputs that are reproducible across reruns and
+independent of batch composition and admission order (also
+test-enforced).
 """
 from __future__ import annotations
 
-from typing import Dict, List, Optional, Sequence
+from collections import deque
+from typing import Deque, Dict, List, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
 
 from repro.core.costmodel import HardwareProfile
 from repro.core.offload_engine import OffloadEngine
 from repro.core.trace import TraceRecorder
+from repro.serving.request import Request
+from repro.serving.sampler import request_key, sample_token
 
 
-class OffloadServer:
-    def __init__(self, params, cfg, *, cache_slots: int, policy: str = "lru",
+class ContinuousOffloadServer:
+    """Continuous-batching scheduler over a shared expert cache."""
+
+    def __init__(self, params, cfg, *, cache_slots, max_batch: int = 4,
+                 cache_len: int = 256, policy: str = "lru",
                  prefetch: Optional[str] = None, quant: str = "none",
-                 hw: Optional[HardwareProfile] = None, overlap: bool = False):
+                 hw: Optional[HardwareProfile] = None, overlap: bool = False,
+                 eos_id: Optional[int] = None, temperature: float = 0.0,
+                 top_p: float = 1.0, seed: int = 0):
+        assert max_batch >= 1
         self.cfg = cfg
+        self.max_batch = max_batch
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self.top_p = top_p
+        self.seed = seed
         self.trace = TraceRecorder()
         self.engine = OffloadEngine(
             params, cfg, cache_slots=cache_slots, policy=policy,
             prefetch=prefetch, quant=quant, hw=hw, overlap=overlap,
             trace=self.trace)
+        self.state = self.engine.init_state(max_batch, cache_len)
+        self.slots: List[Optional[Request]] = [None] * max_batch
+        self.queue: Deque[Request] = deque()
+        self.finished: Dict[int, Request] = {}
+        self._logits = None  # [B, V] of the last step
+
+    # ------------------------------------------------------------ admin
+    def submit(self, prompt: Sequence[int], *, max_new: int,
+               temperature: Optional[float] = None,
+               top_p: Optional[float] = None,
+               seed: Optional[int] = None) -> int:
+        """Queue a request; returns its id (the trace prompt_id)."""
+        assert len(prompt) >= 1, "empty prompt"
+        assert len(prompt) + max_new <= self.cache_len, \
+            f"request needs {len(prompt) + max_new} KV rows, " \
+            f"cache_len={self.cache_len}"
+        rid = self.engine.new_prompt(reset_context=False)
+        req = Request(prompt=list(prompt), max_new=max_new, rid=rid,
+                      temperature=temperature, top_p=top_p, seed=seed)
+        self.queue.append(req)
+        return rid
+
+    def ensure_cache_len(self, n: int) -> None:
+        """Grow every slot's KV allocation to ``n`` rows. Only legal
+        while no request is admitted (KV contents are per-request and
+        masked by position, so an idle reallocation is invisible)."""
+        if n <= self.cache_len:
+            return
+        assert self.num_active == 0, "cannot resize KV with active requests"
+        self.cache_len = n
+        self.state = self.engine.init_state(self.max_batch, n)
+
+    @property
+    def num_active(self) -> int:
+        return sum(1 for r in self.slots if r is not None)
+
+    @property
+    def pending(self) -> int:
+        return self.num_active + len(self.queue)
+
+    def _admit(self) -> None:
+        """Fill free slots from the queue (a token-boundary join)."""
+        if not self.queue:
+            return
+        if self.num_active == 0:
+            # idle server: same prefetch state as a fresh generate()
+            self.engine.reset_prefetch_context()
+        for b in range(self.max_batch):
+            if not self.queue:
+                break
+            if self.slots[b] is None:
+                req = self.queue.popleft()
+                req.slot = b
+                req.pos = 0
+                self.slots[b] = req
+
+    def _retire(self, req: Request) -> None:
+        req.done = True
+        self.slots[req.slot] = None
+        req.slot = -1
+        self.finished[req.rid] = req
+
+    # ------------------------------------------------------------- step
+    def step(self) -> List[int]:
+        """One token-boundary: admit, decode every active slot at its own
+        position, sample/advance, retire. Returns rids retired now."""
+        self._admit()
+        active = [r is not None for r in self.slots]
+        if not any(active):
+            return []
+
+        B = self.max_batch
+        tokens = np.zeros((B, 1), np.int32)
+        positions = [0] * B
+        prompt_ids = [0] * B
+        for b, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tokens[b, 0] = req.tokens[req.pos]
+            positions[b] = req.pos
+            prompt_ids[b] = req.rid
+
+        logits, self.state = self.engine.decode_tokens(
+            self.state, jnp.asarray(tokens), positions,
+            prompt_ids=prompt_ids, active=active)
+        self._logits = logits
+
+        retired: List[int] = []
+        for b in range(B):
+            req = self.slots[b]
+            if req is None:
+                continue
+            req.pos += 1
+            if req.pos < len(req.tokens):
+                continue  # still streaming known tokens (prefill)
+            if req.eos_hit or len(req.out) >= req.max_new:
+                # every known token has been fed (matching generate(),
+                # which decodes the final sampled token too)
+                self._retire(req)
+                retired.append(req.rid)
+                continue
+            req.out.append(self._sample(req, logits[b]))
+            if self.eos_id is not None and req.out[-1] == self.eos_id:
+                req.eos_hit = True
+        return retired
+
+    def _sample(self, req: Request, row) -> int:
+        temp = self.temperature if req.temperature is None else req.temperature
+        if temp <= 0.0:
+            return int(jnp.argmax(row, axis=-1))
+        top_p = self.top_p if req.top_p is None else req.top_p
+        seed = self.seed if req.seed is None else req.seed
+        key = request_key(seed, req.pos)
+        return int(sample_token(key, row[None, :], temperature=temp,
+                                top_p=top_p)[0])
+
+    def run(self, *, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
+        """Drain the queue; returns {rid: full token sequence}."""
+        steps = 0
+        while self.pending:
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        return {rid: r.tokens for rid, r in self.finished.items()}
+
+    def result(self, rid: int) -> List[int]:
+        return self.finished[rid].tokens
+
+    # ------------------------------------------------------------ stats
+    def stats(self) -> Dict[str, float]:
+        s = self.engine.stats()
+        s["finished_requests"] = len(self.finished)
+        s["queued_requests"] = len(self.queue)
+        s["active_requests"] = self.num_active
+        return s
+
+    def request_stats(self, rid: int) -> Dict[str, float]:
+        """This request's cache accounting, sliced from the shared trace."""
+        return self.trace.request_stats(rid)
+
+    def render_trace(self, layer: int, *, prompt_id: Optional[int] = None,
+                     **kw) -> str:
+        return self.trace.render_layer(layer, self.cfg.num_experts,
+                                       prompt_id=prompt_id, **kw)
+
+
+class OffloadServer:
+    """One-request-at-a-time facade (the paper's setting) over the
+    continuous server. API-compatible with the original; greedy output
+    is identical, T>0 sampling uses the per-request key scheme (see
+    module docstring)."""
+
+    def __init__(self, params, cfg, *, cache_slots: int, policy: str = "lru",
+                 prefetch: Optional[str] = None, quant: str = "none",
+                 hw: Optional[HardwareProfile] = None, overlap: bool = False,
+                 cache_len: int = 512):
+        self.cfg = cfg
+        self._srv = ContinuousOffloadServer(
+            params, cfg, cache_slots=cache_slots, max_batch=1,
+            cache_len=cache_len, policy=policy, prefetch=prefetch,
+            quant=quant, hw=hw, overlap=overlap)
+        self.trace = self._srv.trace
+        self.engine = self._srv.engine
 
     def complete(self, prompt: Sequence[int], *, max_new: int,
                  temperature: float = 0.0, seed: int = 0) -> List[int]:
-        return self.engine.generate(list(prompt), max_new,
-                                    temperature=temperature, seed=seed)
+        # requests are sequential here, so the KV allocation can grow to
+        # fit each one (the pre-rework server sized it per request)
+        self._srv.ensure_cache_len(len(prompt) + max_new)
+        rid = self._srv.submit(prompt, max_new=max_new,
+                               temperature=temperature, seed=seed)
+        self._srv.run()
+        return self._srv.result(rid)
 
     def stats(self) -> Dict[str, float]:
-        return self.engine.stats()
+        return self._srv.stats()
 
     def render_trace(self, layer: int, **kw) -> str:
         return self.trace.render_layer(layer, self.cfg.num_experts, **kw)

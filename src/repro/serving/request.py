@@ -1,0 +1,44 @@
+"""Request lifecycle shared by the serving engines.
+
+A ``Request`` moves through: queued -> admitted to a batch slot ->
+prefill (prompt tokens stream through the shared batched decode, one
+per step) -> decode (sample, feed back) -> retired (EOS / ``max_new``).
+The static-batching ``ServingEngine`` uses only the prompt/output
+fields; the continuous ``ContinuousOffloadServer`` drives the full
+lifecycle.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: List[int]
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+    # --- continuous-batching lifecycle (managed by the server) --------
+    rid: int = -1                 # trace prompt_id, assigned at submit
+    slot: int = -1                # batch row while admitted, -1 otherwise
+    pos: int = 0                  # tokens fed so far == next seq position
+    eos_hit: bool = False
+
+    # per-request sampling (None -> server defaults)
+    temperature: Optional[float] = None
+    top_p: Optional[float] = None
+    seed: Optional[int] = None
+
+    @property
+    def tokens(self) -> List[int]:
+        """Everything known for this sequence: prompt + generated."""
+        return self.prompt + self.out
+
+    @property
+    def in_prefill(self) -> bool:
+        return self.pos < len(self.prompt)
+
+    def total_len(self) -> int:
+        return len(self.prompt) + self.max_new

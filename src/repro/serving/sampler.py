@@ -6,6 +6,21 @@ import jax
 import jax.numpy as jnp
 
 
+def request_key(seed: int, token_idx: int) -> jax.Array:
+    """PRNG key for one (request, token) draw.
+
+    Folding only the request's OWN seed and token index into the key
+    makes sampled continuations a pure function of (prompt, seed) —
+    independent of batch composition, admission order, co-scheduled
+    requests, and server-assigned request ids — which is what lets
+    continuous batching preserve per-request outputs at any
+    temperature, not just greedy, and keeps same-seed reruns
+    reproducible. Requests wanting distinct draw streams pass distinct
+    seeds.
+    """
+    return jax.random.fold_in(jax.random.PRNGKey(seed), token_idx)
+
+
 def sample_token(key, logits, *, temperature: float = 0.0,
                  top_p: float = 1.0) -> jnp.ndarray:
     """logits [B, V] -> token ids [B]."""

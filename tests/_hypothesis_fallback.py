@@ -1,0 +1,118 @@
+"""Deterministic stand-in for the subset of ``hypothesis`` the property
+tests use, so the tier-1 suite collects and RUNS when hypothesis is not
+installed (the paper-repro container does not ship it).
+
+Not a shrinker and not random-stratified — just a seeded generator that
+drives each property through a fixed number of pseudo-random examples.
+When hypothesis IS available the real library is used instead (see the
+try/except imports in the test modules), so this only ever weakens
+exploration, never correctness: any example that fails here fails
+reproducibly.
+"""
+from __future__ import annotations
+
+import random
+from typing import Any, Callable, List, Sequence
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class Strategy:
+    def example(self, rnd: random.Random) -> Any:
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value: int, max_value: int):
+        self.min_value, self.max_value = min_value, max_value
+
+    def example(self, rnd):
+        return rnd.randint(self.min_value, self.max_value)
+
+
+class _SampledFrom(Strategy):
+    def __init__(self, elems: Sequence):
+        self.elems = list(elems)
+
+    def example(self, rnd):
+        return rnd.choice(self.elems)
+
+
+class _Lists(Strategy):
+    def __init__(self, elem: Strategy, min_size: int, max_size: int,
+                 unique: bool):
+        self.elem, self.min_size = elem, min_size
+        self.max_size, self.unique = max_size, unique
+
+    def example(self, rnd):
+        n = rnd.randint(self.min_size, self.max_size)
+        out: List = []
+        seen = set()
+        attempts = 0
+        while len(out) < n and attempts < 50 * max(n, 1):
+            v = self.elem.example(rnd)
+            attempts += 1
+            if self.unique:
+                if v in seen:
+                    continue
+                seen.add(v)
+            out.append(v)
+        return out
+
+
+class _Tuples(Strategy):
+    def __init__(self, elems: Sequence[Strategy]):
+        self.elems = elems
+
+    def example(self, rnd):
+        return tuple(e.example(rnd) for e in self.elems)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value: int = 0, max_value: int = 100) -> Strategy:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elems) -> Strategy:
+        return _SampledFrom(elems)
+
+    @staticmethod
+    def lists(elem: Strategy, *, min_size: int = 0, max_size: int = 10,
+              unique: bool = False) -> Strategy:
+        return _Lists(elem, min_size, max_size, unique)
+
+    @staticmethod
+    def tuples(*elems: Strategy) -> Strategy:
+        return _Tuples(elems)
+
+
+def settings(*, max_examples: int = DEFAULT_MAX_EXAMPLES, **_ignored):
+    """Decorator: records max_examples for a later @given below it."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(**strats: Strategy):
+    """Run the test over seeded deterministic examples of each strategy."""
+    def deco(fn: Callable):
+        # NOTE: zero-arg wrapper, and no functools.wraps — pytest would
+        # follow __wrapped__ and mistake strategy params for fixtures.
+        def wrapper():
+            n = getattr(wrapper, "_fallback_max_examples",
+                        DEFAULT_MAX_EXAMPLES)
+            rnd = random.Random(f"fallback:{fn.__name__}")
+            for i in range(n):
+                drawn = {name: s.example(rnd) for name, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except Exception as e:
+                    raise AssertionError(
+                        f"falsifying example ({i + 1}/{n}): {drawn!r}") from e
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco

@@ -1,6 +1,10 @@
 """Unit + property tests for the cache policies (paper §3.1/§4.2)."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.cache_policies import (LFU, LRU, AgedLFU, Belady, FIFO, LRFU,
                                        POLICIES, RandomPolicy, make_policy)

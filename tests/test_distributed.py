@@ -14,6 +14,9 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 SCRIPT = textwrap.dedent("""

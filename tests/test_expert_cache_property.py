@@ -4,7 +4,11 @@ hold, (2) gathered weights are bit-identical to the store's (the system
 invariant behind 'caching never changes outputs')."""
 import numpy as np
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core.cache_policies import make_policy
 from repro.core.expert_cache import ExpertCache

@@ -2,6 +2,9 @@
 swept over shapes/dtypes (deliverable c)."""
 import numpy as np
 import pytest
+
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
 import jax
 import jax.numpy as jnp
 

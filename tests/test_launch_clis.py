@@ -3,6 +3,10 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

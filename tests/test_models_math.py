@@ -16,6 +16,8 @@ from repro.models import transformer as tf
 
 from conftest import tiny
 
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
 TOKENS = [3, 17, 42, 5, 99, 7, 23, 56]
 
 

@@ -16,6 +16,8 @@ from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
 
 from conftest import tiny
 
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
 B, S = 2, 64
 
 

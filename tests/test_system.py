@@ -20,6 +20,8 @@ from repro.training.optimizer import AdamWConfig
 
 from conftest import tiny
 
+pytestmark = pytest.mark.slow  # quick loop: -m "not slow"
+
 
 @pytest.fixture(scope="module")
 def trained_mixtral():

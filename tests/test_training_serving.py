@@ -16,6 +16,7 @@ from repro.training.optimizer import (AdamWConfig, adamw_init, adamw_update,
 from conftest import tiny
 
 
+@pytest.mark.slow
 def test_train_reduces_loss_quickly():
     cfg = tiny("qwen1.5-0.5b", d_model=128, vocab=64)
 
