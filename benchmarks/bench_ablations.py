@@ -10,7 +10,6 @@ conditions". Pure policy replay over calibrated workloads.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, replay_policy
 from repro.data import workload_from_paper_stats

@@ -9,7 +9,6 @@
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (emit, eval_prompts, replay_policy,
                                trained_reduced_mixtral)

@@ -11,7 +11,6 @@ rate with the paper's four GPUs' constants.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import (emit, eval_prompts, replay_policy,
                                trained_reduced_mixtral)

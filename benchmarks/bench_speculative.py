@@ -7,11 +7,9 @@ tokens (the Fig 13/14 analogue).
 """
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, eval_prompts, trained_reduced_mixtral
 from repro.core import OffloadEngine
-from repro.core.costmodel import HardwareProfile
 
 
 def run() -> None:

@@ -3,11 +3,9 @@ across benches), policy-replay harness over calibrated workloads, and
 CSV emission in the ``name,us_per_call,derived`` house format."""
 from __future__ import annotations
 
-import dataclasses
 import functools
 import os
-import time
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List
 
 import jax
 import numpy as np

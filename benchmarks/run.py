@@ -2,15 +2,20 @@
 
 Prints ``name,us_per_call,derived`` CSV lines (house format) plus each
 module's own tables. Run:  PYTHONPATH=src python -m benchmarks.run
+Filter with ``--only <name>`` (repeatable; see ``--list``) — CI runs
+``--only serving_offload_batched`` as its smoke bench and archives the
+CSV stdout as an artifact. Exit code is non-zero iff any selected
+bench failed.
 """
 from __future__ import annotations
 
+import argparse
 import sys
 import time
 import traceback
 
 
-def main() -> None:
+def suite():
     from benchmarks import (bench_ablations, bench_adaptive_cache,
                             bench_beyond_paper, bench_cache_policies,
                             bench_expert_distribution, bench_kernels,
@@ -18,7 +23,7 @@ def main() -> None:
                             bench_serving_offload, bench_speculative,
                             bench_traces)
 
-    suite = [
+    return [
         ("table1_offload_sweep", bench_offload_sweep.run),
         ("serving_offload_batched", bench_serving_offload.run),
         ("table2_cache_policies", bench_cache_policies.run),
@@ -31,8 +36,30 @@ def main() -> None:
         ("kernels", bench_kernels.run),
         ("roofline", bench_roofline.run),
     ]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", action="append", metavar="NAME",
+                    help="run only this bench (repeatable)")
+    ap.add_argument("--list", action="store_true",
+                    help="print bench names and exit")
+    args = ap.parse_args(argv)
+
+    benches = suite()
+    if args.list:
+        for name, _ in benches:
+            print(name)
+        return 0
+    if args.only:
+        known = {name for name, _ in benches}
+        unknown = [n for n in args.only if n not in known]
+        if unknown:
+            ap.error(f"unknown bench(es) {unknown}; see --list")
+        benches = [(n, fn) for n, fn in benches if n in set(args.only)]
+
     failed = []
-    for name, fn in suite:
+    for name, fn in benches:
         print(f"\n{'=' * 70}\n== {name}\n{'=' * 70}")
         t0 = time.time()
         try:
@@ -43,9 +70,10 @@ def main() -> None:
             failed.append(name)
     if failed:
         print(f"\nFAILED benches: {failed}")
-        sys.exit(1)
+        return 1
     print("\nALL BENCHES OK")
+    return 0
 
 
 if __name__ == "__main__":
-    main()
+    sys.exit(main())

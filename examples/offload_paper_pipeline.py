@@ -12,8 +12,6 @@ Run:  PYTHONPATH=src python examples/offload_paper_pipeline.py
 """
 import dataclasses
 
-import jax
-import numpy as np
 
 from repro.configs import get_config, reduced
 from repro.core import OffloadEngine

@@ -5,7 +5,6 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 """
 import dataclasses
 
-import jax
 
 from repro.configs import get_config, reduced
 from repro.data import lm_batches

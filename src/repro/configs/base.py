@@ -7,7 +7,6 @@ frozen dataclasses so they can be hashed into jit static args.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Optional, Tuple
 
 Family = str  # "dense" | "moe" | "ssm" | "hybrid" | "encdec" | "vlm"

@@ -3,11 +3,12 @@ from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
 from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
 from repro.core.offload_engine import OffloadEngine
+from repro.core.paged_kv import PagedKVCache
 from repro.core.prefetch import MarkovPredictor, SpeculativePrefetcher
 from repro.core.trace import StepTrace, TraceRecorder
 
 __all__ = [
     "POLICIES", "make_policy", "CostModel", "HardwareProfile", "ModelBytes",
     "ExpertCache", "ExpertStore", "OffloadEngine", "MarkovPredictor",
-    "SpeculativePrefetcher", "StepTrace", "TraceRecorder",
+    "PagedKVCache", "SpeculativePrefetcher", "StepTrace", "TraceRecorder",
 ]

@@ -11,10 +11,9 @@ property tests (capacity invariants, hit monotonicity).
 """
 from __future__ import annotations
 
-import heapq
 import random
 from collections import Counter, OrderedDict
-from typing import Hashable, Iterable, List, Optional, Sequence
+from typing import Hashable, List, Sequence
 
 Key = Hashable
 

@@ -14,7 +14,6 @@ TPU v5e host-DMA profile is provided as an alternative. Table 1's
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
 
 GiB = 1024 ** 3
 
@@ -67,6 +66,7 @@ class ModelBytes:
     expert_bytes: int          # bytes of ONE expert's weights (as stored)
     attn_bytes_per_layer: int  # non-expert per-layer weights resident bytes
     vocab_bytes: int
+    kv_bytes_per_token: int = 0  # ONE layer's K+V rows for one position
 
     @classmethod
     def from_config(cls, cfg, *, expert_dtype_bytes: float = 2.0,
@@ -76,14 +76,17 @@ class ModelBytes:
         if cfg.use_mla:
             r, rd, H, hd = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.num_heads, cfg.head_dim
             attn = d * H * (hd + rd) + d * (r + rd) + r * H * 2 * hd + H * hd * d
+            kv_tok = (r + rd) * dense_dtype_bytes     # absorbed latent cache
         else:
             hd = cfg.head_dim
             attn = d * cfg.num_heads * hd + 2 * d * cfg.num_kv_heads * hd \
                 + cfg.num_heads * hd * d
+            kv_tok = 2 * cfg.num_kv_heads * hd * dense_dtype_bytes
         attn_bytes = int(attn * dense_dtype_bytes)
         vocab_bytes = int(2 * cfg.vocab_size * d * dense_dtype_bytes)
         return cls(cfg.num_layers, d, ff, cfg.num_experts,
-                   cfg.num_experts_per_tok, expert_bytes, attn_bytes, vocab_bytes)
+                   cfg.num_experts_per_tok, expert_bytes, attn_bytes,
+                   vocab_bytes, int(kv_tok))
 
     def expert_flops_per_token(self) -> float:
         return 2.0 * 3 * self.d_model * self.expert_d_ff
@@ -103,13 +106,31 @@ class CostModel:
     ctx_len: int = 512
 
     # ---------------------------------------------------------- memory
-    def peak_memory_bytes(self, offloads_per_layer: float) -> int:
+    def peak_memory_bytes(self, offloads_per_layer: float,
+                          kv_tokens: float = 0.0) -> int:
         """Device memory with `offloads_per_layer` experts offloaded
         (cache slots hold num_experts - offloads resident experts;
-        may be fractional for non-uniform per-layer budgets)."""
+        may be fractional for non-uniform per-layer budgets).
+        ``kv_tokens`` adds the residency of that many paged KV rows
+        (block pool occupancy x block_size) across all layers."""
         resident = self.mb.num_experts - offloads_per_layer
         per_layer = self.mb.attn_bytes_per_layer + resident * self.mb.expert_bytes
-        return int(self.mb.num_layers * per_layer + self.mb.vocab_bytes)
+        kv = kv_tokens * self.mb.kv_bytes_per_token
+        return int(self.mb.num_layers * (per_layer + kv) + self.mb.vocab_bytes)
+
+    def kv_block_bytes(self, block_size: int) -> int:
+        """Device bytes one paged KV block pins ACROSS all layers (the
+        pool is replicated per layer, block ids are shared)."""
+        return int(block_size * self.mb.kv_bytes_per_token
+                   * self.mb.num_layers)
+
+    def kv_tokens_per_expert_slot(self) -> float:
+        """How many paged KV rows fit in the bytes of ONE expert-cache
+        slot (same layer). This is the residency exchange rate the
+        paged scheduler trades on: shrinking the pool by this many
+        tokens buys one more cached expert per layer — the block-size /
+        pool-size tuning knob docs/serving.md discusses."""
+        return self.mb.expert_bytes / max(self.mb.kv_bytes_per_token, 1)
 
     # ---------------------------------------------------------- timing
     def expert_transfer_time(self) -> float:

@@ -8,10 +8,8 @@ what is actually stored).
 """
 from __future__ import annotations
 
-from typing import Dict, Hashable, Tuple
+from typing import Dict, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 Key = Tuple[int, int]  # (layer, expert_id)

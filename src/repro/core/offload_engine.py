@@ -26,7 +26,6 @@ from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
 from repro.core.prefetch import MarkovPredictor, SpeculativePrefetcher
 from repro.core.trace import TraceRecorder
-from repro.models import attention as attn_lib
 from repro.models import transformer as tf
 from repro.models.layers import rms_norm, sinusoidal_positions
 
@@ -234,7 +233,8 @@ class OffloadEngine:
     def decode_tokens(self, state, tokens, positions: Sequence[int],
                       token_indices: Optional[Sequence[int]] = None, *,
                       prompt_ids: Optional[Sequence[int]] = None,
-                      active: Optional[Sequence[bool]] = None):
+                      active: Optional[Sequence[bool]] = None,
+                      block_tables=None):
         """True B>1 decode over the shared per-layer expert caches.
 
         tokens [B,1] int32; ``positions[b]`` is row b's sequence position
@@ -246,6 +246,14 @@ class OffloadEngine:
         serving slot: the row is decoded (static shapes) but routed
         nowhere, attends only to its own slot's KV rows, and is excluded
         from the union access, the trace, and the simulated clock.
+
+        ``block_tables`` [B, T] int32 switches the KV path to a PAGED
+        pool: ``state["layers"][l]`` must then be a per-layer block pool
+        (see ``repro.core.paged_kv.PagedKVCache``) and row b's KV lives
+        at the physical blocks ``block_tables[b]`` instead of slot b of
+        a dense [B, cache_len] allocation. The paged path is bit-exact
+        with the dense one, so everything downstream (routing, caches,
+        trace, clock) is unchanged.
         Returns (logits [B,V], state).
         """
         cfg = self.cfg
@@ -275,8 +283,12 @@ class OffloadEngine:
 
         for l in range(cfg.num_layers):
             p_l = _layer_slice(params["layers"], l)
-            h, state["layers"][l] = tf._attn_decode_multipos(
-                p_l, cfg, h, state["layers"][l], pos_vec)
+            if block_tables is None:
+                h, state["layers"][l] = tf._attn_decode_multipos(
+                    p_l, cfg, h, state["layers"][l], pos_vec)
+            else:
+                h, state["layers"][l] = tf._attn_decode_paged(
+                    p_l, cfg, h, state["layers"][l], pos_vec, block_tables)
 
             # --- speculative guess for layer l+1 (paper §3.2) ---------
             guess: Tuple[int, ...] = ()

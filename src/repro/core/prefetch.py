@@ -12,8 +12,7 @@ l+1's.
 """
 from __future__ import annotations
 
-from collections import defaultdict
-from typing import Dict, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import jax.numpy as jnp
 import numpy as np

@@ -17,8 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from collections import Counter, defaultdict
-from typing import Dict, List, Optional, Sequence, Tuple
+from collections import Counter
+from typing import Dict, List, Optional, Tuple
 
 
 @dataclasses.dataclass

@@ -17,7 +17,6 @@ All matmul dims are kept multiples of 128 for the MXU by padding in
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

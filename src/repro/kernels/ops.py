@@ -8,7 +8,6 @@ MXU-friendly padding, GQA broadcast, and an ``impl`` switch:
 from __future__ import annotations
 
 import functools
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -16,6 +15,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.moe_gemm import moe_gemm_pallas
+from repro.kernels.paged_attention import paged_attention_pallas
 from repro.kernels.ssd_chunk import ssd_chunk_pallas
 
 
@@ -96,3 +96,26 @@ def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                                      interpret=interpret)
         out = out[:, :Sq0]
     return out.reshape(B, H, Sq, vd).transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("impl",))
+def paged_attention(q, k_pool, v_pool, block_tables, pos, *,
+                    impl: str = "xla"):
+    """Single-token decode attention over a paged KV pool.
+
+    q [B, H, hd]; k/v_pool [num_blocks, block_size, KV, hd] (the
+    serving layer's shared block pool); block_tables [B, T] int32 maps
+    each row's logical blocks to physical ones; pos [B] int32 bounds
+    each row's visible keys (logical index <= pos). GQA grouping is
+    H // KV. Returns [B, H, hd]."""
+    B, H, hd = q.shape
+    KV = k_pool.shape[2]
+    assert H % KV == 0, f"q heads {H} not grouped over {KV} kv heads"
+    block_tables = block_tables.astype(jnp.int32)
+    pos = pos.astype(jnp.int32)
+    if impl == "xla":
+        return ref.paged_attention_ref(q, k_pool, v_pool, block_tables, pos)
+    out = paged_attention_pallas(
+        q.reshape(B, KV, H // KV, hd), k_pool, v_pool, block_tables, pos,
+        interpret=impl == "pallas_interpret")
+    return out.reshape(B, H, hd)

@@ -1,0 +1,109 @@
+"""Pallas TPU kernel: single-token paged decode attention.
+
+K/V live in a shared block pool ``[N, block_size, KV, hd]``; each batch
+row reads its own sequence through a block table ``[B, T]``. The table
+(and per-row positions) ride in as SCALAR-PREFETCH operands
+(``pltpu.PrefetchScalarGridSpec``), so the index map of the K/V
+operands can select the physical block to DMA before the kernel body
+runs — the gather never materialises a contiguous copy of the row's
+KV in HBM.
+
+grid = (B, T): the T dimension is innermost and walks the row's logical
+blocks with fp32 online-softmax running stats (max / denom / accum) in
+VMEM scratch, exactly like the flash kernel's k-block loop. Padded
+table entries (rows shorter than T blocks) are masked by the per-row
+position bound — every lane past ``pos`` contributes exp(-inf) = 0.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tbl_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
+            m_scr, l_scr, acc_scr, *, scale: float, block_size: int,
+            n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [KV, G, hd]
+    k = k_ref[0]                                   # [bs, KV, hd]
+    v = v_ref[0]                                   # [bs, KV, hd]
+    s = jnp.einsum("kgh,skh->kgs", q, k,
+                   preferred_element_type=jnp.float32) * scale
+
+    # logical key position of lane s in this block vs the row's bound
+    k_pos = j * block_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, 1, block_size), 2)
+    s = jnp.where(k_pos <= pos_ref[b], s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+    acc_scr[...] = acc_scr[...] * corr[..., None] + jnp.einsum(
+        "kgs,skh->kgh", p.astype(v.dtype), v,
+        preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finalize():
+        o_ref[0] = (acc_scr[...]
+                    / jnp.maximum(l_scr[...], 1e-30)[..., None]
+                    ).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pool, v_pool, block_tables, pos, *,
+                           scale=None, interpret: bool = False):
+    """q [B, KV, G, hd]; k/v_pool [N, bs, KV, hd]; block_tables [B, T]
+    int32; pos [B] int32 (row's current position; keys at logical index
+    <= pos attend). Returns [B, KV, G, hd].
+
+    For real TPU lowering ``bs`` should be a multiple of the dtype's
+    sublane tile (8 for fp32 — the serving default block_size=16 is);
+    interpret mode has no such constraint."""
+    B, KV, G, hd = q.shape
+    bs = k_pool.shape[1]
+    T = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    kern = functools.partial(_kernel, scale=scale, block_size=bs,
+                             n_blocks=T)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,     # block_tables, pos
+        grid=(B, T),
+        in_specs=[
+            pl.BlockSpec((1, KV, G, hd), lambda b, j, tbl, pos: (b, 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, hd),
+                         lambda b, j, tbl, pos: (tbl[b, j], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, KV, G, hd),
+                               lambda b, j, tbl, pos: (b, 0, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G), jnp.float32),
+            pltpu.VMEM((KV, G, hd), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, pos, q, k_pool, v_pool)

@@ -36,6 +36,31 @@ def ssd_chunk_ref(dA, xw, Bm, Cm):
     return y, s
 
 
+def paged_attention_ref(q, k_pool, v_pool, block_tables, pos, *, scale=None):
+    """Single-token decode attention through a block table.
+
+    q [B, H, hd]; k/v_pool [N, bs, KV, hd]; block_tables [B, T] int32;
+    pos [B] int32 -> [B, H, hd]. Row b attends to the keys its table
+    gathers at logical indices <= pos[b] (exact softmax oracle for the
+    Pallas paged kernel)."""
+    B, H, hd = q.shape
+    bs, KV = k_pool.shape[1], k_pool.shape[2]
+    T = block_tables.shape[1]
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    kg = k_pool[block_tables].reshape(B, T * bs, KV, hd)
+    vg = v_pool[block_tables].reshape(B, T * bs, KV, hd)
+    if KV != H:
+        kg = jnp.repeat(kg, H // KV, axis=2)
+        vg = jnp.repeat(vg, H // KV, axis=2)
+    s = jnp.einsum("bhd,blhd->bhl", q.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * scale
+    valid = jnp.arange(T * bs)[None, :] <= pos[:, None]     # [B, T*bs]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhl,blhd->bhd", p,
+                      vg.astype(jnp.float32)).astype(q.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         scale=None):
     """q [BH,Sq,hd]; k/v [BH,Sk,hd] -> [BH,Sq,hd] (exact softmax)."""

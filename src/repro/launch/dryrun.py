@@ -9,10 +9,9 @@ import argparse
 import json
 import re
 import time
-from typing import Dict, Optional
+from typing import Dict
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import INPUT_SHAPES, get_config
@@ -22,7 +21,7 @@ from repro.launch.hlo_cost import analyze_compiled
 from repro.launch.mesh import make_production_mesh, sharding_rules
 from repro.models import transformer as tf
 from repro.models.sharding import param_pspecs, sharding_ctx
-from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update
+from repro.training.optimizer import AdamWConfig, adamw_init
 from repro.training.train_loop import make_train_step
 
 _DTYPE_BYTES = {"pred": 0.125, "s8": 1, "u8": 1, "s16": 2, "u16": 2,

@@ -19,7 +19,6 @@ matching HloCostAnalysis's memory-traffic convention.
 from __future__ import annotations
 
 import dataclasses
-import json
 import re
 from typing import Dict, List, Optional, Tuple
 

@@ -12,7 +12,6 @@ from __future__ import annotations
 from typing import Dict, Optional, Tuple
 
 import jax
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -9,14 +9,13 @@ dry-run lowers against:
 """
 from __future__ import annotations
 
-import functools
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
-from repro.configs import INPUT_SHAPES, ModelConfig
+from repro.configs import INPUT_SHAPES
 from repro.models import transformer as tf
 
 

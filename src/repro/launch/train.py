@@ -15,7 +15,6 @@ from __future__ import annotations
 import argparse
 import dataclasses
 
-import jax
 
 from repro.configs import get_config, reduced
 from repro.data import lm_batches

@@ -15,7 +15,6 @@ Conventions
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Optional
 
 import jax
@@ -338,6 +337,86 @@ def gqa_decode_multipos(p, cfg, x, cache, pos_vec):
 
 
 # =====================================================================
+# GQA paged decode (block-table KV — continuous serving over a pool)
+# =====================================================================
+def gqa_paged_cache_init(cfg, num_blocks: int, block_size: int, dtype):
+    """One layer's K/V block pool: [N, bs, kv, hd] (vs dense [B, L, kv, hd])."""
+    _, kv = _head_padding(cfg.num_heads, cfg.num_kv_heads)
+    hd = cfg.head_dim
+    return {
+        "k": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+        "v": jnp.zeros((num_blocks, block_size, kv, hd), dtype),
+    }
+
+
+def gqa_decode_paged(p, cfg, x, cache, pos_vec, block_tables):
+    """``gqa_decode_multipos`` reading K/V through a block table.
+
+    x [B,1,d]; cache {k,v [N,bs,kv,hd]} (the shared pool); pos_vec [B]
+    request-LOCAL positions; block_tables [B,T] int32 — logical block i
+    of row b lives at physical block ``block_tables[b, i]``. Row b's new
+    K/V is scattered to (table[pos//bs], pos%bs); attention gathers the
+    row's T blocks back into a [T*bs] logical strip and masks
+    ``idx <= pos`` exactly like the dense path, so paged and dense
+    decode are BIT-IDENTICAL: gathered keys occupy the same logical
+    indices, masked lanes underflow to exactly zero weight, and zero
+    rows are exact no-ops in the fp32 accumulation (test-enforced
+    token-for-token equality). Padded/stale table entries are
+    unreachable for the same reason.
+    """
+    B = x.shape[0]
+    bs = cache["k"].shape[1]
+    positions = jnp.reshape(pos_vec, (B, 1)).astype(jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions, rope=True)
+
+    # scatter: row b's K/V lands in its own table's block — tables of
+    # live requests never alias (allocator invariant), so rows write
+    # disjoint (block, offset) cells
+    rows = jnp.arange(B)
+    blk = block_tables[rows, positions[:, 0] // bs]
+    off = positions[:, 0] % bs
+    k = cache["k"].at[blk, off].set(k_new[:, 0].astype(cache["k"].dtype))
+    v = cache["v"].at[blk, off].set(v_new[:, 0].astype(cache["v"].dtype))
+
+    if PAGED_ATTN_IMPL != "xla":
+        from repro.kernels import ops as kops
+        out = kops.paged_attention(q[:, 0], k, v, block_tables,
+                                   positions[:, 0], impl=PAGED_ATTN_IMPL)
+        out = out[:, None].astype(x.dtype)
+        H = q.shape[2]
+        wo = _pad_heads(p["wo"], H, 0)
+        return jnp.einsum("bshk,hkd->bsd", out, wo), {"k": k, "v": v}
+
+    # gather the per-row logical KV strip: [B,T,bs,kv,hd] -> [B,T*bs,kv,hd]
+    T = block_tables.shape[1]
+    kg = k[block_tables].reshape(B, T * bs, *k.shape[2:])
+    vg = v[block_tables].reshape(B, T * bs, *v.shape[2:])
+
+    H, KV, hd = q.shape[2], kg.shape[2], cfg.head_dim
+    G = H // KV
+    qf = q.reshape(B, KV, G, hd).astype(kg.dtype)
+    s = jnp.einsum("bkgh,blkh->bkgl", qf, kg,
+                   preferred_element_type=jnp.float32)
+    s = s / math.sqrt(hd)
+
+    valid = jnp.arange(T * bs)[None, :] <= positions  # [B, T*bs]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgl,blkh->bkgh", w.astype(vg.dtype), vg,
+                     preferred_element_type=jnp.float32)
+    out = out.reshape(B, 1, H, hd).astype(x.dtype)
+    wo = _pad_heads(p["wo"], H, 0)
+    y = jnp.einsum("bshk,hkd->bsd", out, wo)
+    return y, {"k": k, "v": v}
+
+
+# Paged decode attention implementation: "xla" (gather + masked softmax,
+# bit-identical to the dense multipos path — CPU/test default) |
+# "pallas" (TPU block-table gather kernel) | "pallas_interpret".
+PAGED_ATTN_IMPL = "xla"
+
+
+# =====================================================================
 # MLA (DeepSeek-V2)
 # =====================================================================
 def _mla_q(p, cfg, x, positions):
@@ -463,6 +542,61 @@ def mla_decode_multipos(p, cfg, x, cache, pos_vec):
     s = jnp.where(valid[:, None, :], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhl,blr->bhr", w.astype(cdt), latent,
+                     preferred_element_type=jnp.float32)
+    out = jnp.einsum("bhr,rhk->bhk", ctx.astype(p["w_vb"].dtype), p["w_vb"],
+                     preferred_element_type=jnp.float32)
+    out = out[:, None].astype(x.dtype)  # [B,1,H,hd]
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+    return y, {"latent": latent, "k_rope": k_rope}
+
+
+# =====================================================================
+# MLA paged decode (block-table latent pool)
+# =====================================================================
+def mla_paged_cache_init(cfg, num_blocks: int, block_size: int, dtype):
+    """One layer's latent block pool: [N, bs, r] + [N, bs, rd]."""
+    return {
+        "latent": jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+        "k_rope": jnp.zeros((num_blocks, block_size, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_decode_paged(p, cfg, x, cache, pos_vec, block_tables):
+    """Absorbed MLA decode through a block table (see
+    ``gqa_decode_paged`` for the layout/exactness contract — identical
+    here, with the [T*bs] gathered strip standing in for the dense
+    [L] latent cache)."""
+    B = x.shape[0]
+    bs = cache["latent"].shape[1]
+    positions = jnp.reshape(pos_vec, (B, 1)).astype(jnp.int32)
+    q_nope, q_rope = _mla_q(p, cfg, x, positions)
+    latent_new, k_rope_new = _mla_latent(p, cfg, x, positions)
+
+    rows = jnp.arange(B)
+    blk = block_tables[rows, positions[:, 0] // bs]
+    off = positions[:, 0] % bs
+    latent = cache["latent"].at[blk, off].set(
+        latent_new[:, 0].astype(cache["latent"].dtype))
+    k_rope = cache["k_rope"].at[blk, off].set(
+        k_rope_new[:, 0].astype(cache["k_rope"].dtype))
+
+    T = block_tables.shape[1]
+    lg = latent[block_tables].reshape(B, T * bs, latent.shape[-1])
+    rg = k_rope[block_tables].reshape(B, T * bs, k_rope.shape[-1])
+
+    cdt = cache["latent"].dtype
+    q_abs = jnp.einsum("bhk,rhk->bhr", q_nope[:, 0], p["w_kb"],
+                       preferred_element_type=jnp.float32)
+    s = jnp.einsum("bhr,blr->bhl", q_abs.astype(cdt), lg,
+                   preferred_element_type=jnp.float32)
+    s = s + jnp.einsum("bhk,blk->bhl", q_rope[:, 0].astype(cdt), rg,
+                       preferred_element_type=jnp.float32)
+    s = s / math.sqrt(cfg.head_dim + cfg.qk_rope_dim)
+
+    valid = jnp.arange(T * bs)[None, :] <= positions  # [B, T*bs]
+    s = jnp.where(valid[:, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhl,blr->bhr", w.astype(cdt), lg,
                      preferred_element_type=jnp.float32)
     out = jnp.einsum("bhr,rhk->bhk", ctx.astype(p["w_vb"].dtype), p["w_vb"],
                      preferred_element_type=jnp.float32)

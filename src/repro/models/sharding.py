@@ -7,7 +7,6 @@ smoke tests and the offload engine run single-device untouched.
 """
 from __future__ import annotations
 
-import re
 from contextlib import contextmanager
 from typing import Optional
 

@@ -11,8 +11,7 @@ Layers are stacked into homogeneous groups and iterated with
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -364,6 +363,20 @@ def _attn_decode_multipos(p, cfg, h, cache, pos_vec):
         y, cache = attn.mla_decode_multipos(p["attn"], cfg, x, cache, pos_vec)
     else:
         y, cache = attn.gqa_decode_multipos(p["attn"], cfg, x, cache, pos_vec)
+    return h + y, cache
+
+
+def _attn_decode_paged(p, cfg, h, cache, pos_vec, block_tables):
+    """Per-row-position decode over a paged KV pool: ``cache`` is one
+    layer's block pool and ``block_tables [B, T]`` maps each row's
+    logical blocks to physical ones (see ``repro.core.paged_kv``)."""
+    x = rms_norm(h, p["ln1"], cfg.norm_eps)
+    if cfg.use_mla:
+        y, cache = attn.mla_decode_paged(p["attn"], cfg, x, cache, pos_vec,
+                                         block_tables)
+    else:
+        y, cache = attn.gqa_decode_paged(p["attn"], cfg, x, cache, pos_vec,
+                                         block_tables)
     return h + y, cache
 
 

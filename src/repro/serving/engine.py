@@ -16,7 +16,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import transformer as tf
-from repro.serving.request import Request  # noqa: F401  (re-export)
 from repro.serving.sampler import sample_token
 
 

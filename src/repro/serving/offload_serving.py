@@ -12,6 +12,22 @@ the UNION of their expert sets (misses amortize) while competing for
 the same cache slots (per-request hit rates fall) — see
 ``CostModel.expected_union_experts`` and docs/serving.md.
 
+KV state is PAGED by default (``kv_layout="paged"``): instead of a
+dense per-slot ``[max_batch, cache_len]`` block, K/V rows live in a
+shared pool of fixed-size blocks (``repro.core.paged_kv.PagedKVCache``)
+addressed through per-request block tables, so slot count and max
+sequence length decouple — one slot may hold a sequence far longer
+than ``cache_len`` while its neighbours hold short ones. Admission is
+page-aware: a request joins when the pool can hold its known tokens
+(minus a configurable watermark reserved for the decode growth of
+already-running requests), and the scheduler may OVERCOMMIT — if the
+pool exhausts mid-decode, the youngest request is preempted back to
+the queue (its KV blocks freed; its tokens, already sampled, replay as
+prefill on re-admission, so generated text is unaffected). The paged
+attention path is bit-exact with the dense one, so both layouts — and
+``OffloadEngine.generate`` — produce identical tokens, traces, and
+simulated clocks at temperature 0 (test-enforced).
+
 ``OffloadServer`` keeps the original one-request-at-a-time API and is a
 thin wrapper over a ``max_batch=1`` continuous server; batch-of-1
 continuous serving reproduces ``OffloadEngine.generate`` token for
@@ -33,6 +49,7 @@ import numpy as np
 
 from repro.core.costmodel import HardwareProfile
 from repro.core.offload_engine import OffloadEngine
+from repro.core.paged_kv import PagedKVCache
 from repro.core.trace import TraceRecorder
 from repro.serving.request import Request
 from repro.serving.sampler import request_key, sample_token
@@ -46,8 +63,13 @@ class ContinuousOffloadServer:
                  prefetch: Optional[str] = None, quant: str = "none",
                  hw: Optional[HardwareProfile] = None, overlap: bool = False,
                  eos_id: Optional[int] = None, temperature: float = 0.0,
-                 top_p: float = 1.0, seed: int = 0):
+                 top_p: float = 1.0, seed: int = 0,
+                 kv_layout: str = "paged", kv_block_size: int = 16,
+                 kv_num_blocks: Optional[int] = None,
+                 kv_watermark: float = 0.0):
         assert max_batch >= 1
+        assert kv_layout in ("paged", "dense")
+        assert 0.0 <= kv_watermark < 1.0
         self.cfg = cfg
         self.max_batch = max_batch
         self.cache_len = cache_len
@@ -60,22 +82,52 @@ class ContinuousOffloadServer:
             params, cfg, cache_slots=cache_slots, policy=policy,
             prefetch=prefetch, quant=quant, hw=hw, overlap=overlap,
             trace=self.trace)
-        self.state = self.engine.init_state(max_batch, cache_len)
+        self.kv_layout = kv_layout
+        self.kv_block_size = kv_block_size
+        self.kv_watermark = kv_watermark
+        self.paged: Optional[PagedKVCache] = None
+        if kv_layout == "paged":
+            # default pool = the dense allocation's token capacity, but
+            # shared: any request may span many blocks (kv_num_blocks
+            # sets the overcommit headroom explicitly)
+            n = kv_num_blocks if kv_num_blocks is not None else \
+                -(-max_batch * cache_len // kv_block_size)
+            self.paged = PagedKVCache(n, kv_block_size, cfg=cfg,
+                                      dtype=jnp.float32)
+            self.state = self.paged.state
+        else:
+            self.state = self.engine.init_state(max_batch, cache_len)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
         self._logits = None  # [B, V] of the last step
+        self._join_seq = 0
+        self.kv_preemptions = 0
+        self.kv_deferred_admissions = 0
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: Sequence[int], *, max_new: int,
                temperature: Optional[float] = None,
                top_p: Optional[float] = None,
                seed: Optional[int] = None) -> int:
-        """Queue a request; returns its id (the trace prompt_id)."""
+        """Queue a request; returns its id (the trace prompt_id).
+
+        Rejects (raises ValueError) a request that could NEVER be
+        served: longer than the paged pool's total capacity, or than a
+        dense slot's ``cache_len``. Requests that fit but find the pool
+        busy are NOT rejected — they wait in the queue (and running
+        requests may be preempted/requeued to make room)."""
         assert len(prompt) >= 1, "empty prompt"
-        assert len(prompt) + max_new <= self.cache_len, \
-            f"request needs {len(prompt) + max_new} KV rows, " \
-            f"cache_len={self.cache_len}"
+        total = len(prompt) + max_new
+        if self.kv_layout == "paged":
+            if total > self.paged.capacity_tokens:
+                raise ValueError(
+                    f"request needs {total} KV rows, paged pool holds "
+                    f"{self.paged.capacity_tokens} "
+                    f"({self.paged.num_blocks} x {self.kv_block_size})")
+        elif total > self.cache_len:
+            raise ValueError(
+                f"request needs {total} KV rows, cache_len={self.cache_len}")
         rid = self.engine.new_prompt(reset_context=False)
         req = Request(prompt=list(prompt), max_new=max_new, rid=rid,
                       temperature=temperature, top_p=top_p, seed=seed)
@@ -83,9 +135,21 @@ class ContinuousOffloadServer:
         return rid
 
     def ensure_cache_len(self, n: int) -> None:
-        """Grow every slot's KV allocation to ``n`` rows. Only legal
-        while no request is admitted (KV contents are per-request and
-        masked by position, so an idle reallocation is invisible)."""
+        """Grow the KV allocation so one request of ``n`` rows fits
+        (every slot's strip for dense; the shared pool for paged). Only
+        legal while no request is admitted (KV contents are per-request
+        and masked by position, so an idle reallocation is invisible)."""
+        if self.kv_layout == "paged":
+            need = self.paged.blocks_for(n)
+            if need <= self.paged.num_blocks:
+                return
+            assert self.num_active == 0, \
+                "cannot resize KV with active requests"
+            self.cache_len = max(self.cache_len, n)
+            self.paged = PagedKVCache(need, self.kv_block_size,
+                                      cfg=self.cfg, dtype=jnp.float32)
+            self.state = self.paged.state
+            return
         if n <= self.cache_len:
             return
         assert self.num_active == 0, "cannot resize KV with active requests"
@@ -101,7 +165,15 @@ class ContinuousOffloadServer:
         return self.num_active + len(self.queue)
 
     def _admit(self) -> None:
-        """Fill free slots from the queue (a token-boundary join)."""
+        """Fill free slots from the queue (a token-boundary join).
+
+        Paged admission is PAGE-AWARE: the head request joins only when
+        the pool can hold its known tokens while keeping
+        ``kv_watermark`` of the blocks free for running requests'
+        decode growth (an idle server ignores the watermark — sole
+        occupancy cannot starve anyone). A blocked head DEFERS the
+        whole queue (FIFO, no overtaking) and is counted in
+        ``kv_deferred_admissions``."""
         if not self.queue:
             return
         if self.num_active == 0:
@@ -110,23 +182,83 @@ class ContinuousOffloadServer:
         for b in range(self.max_batch):
             if not self.queue:
                 break
-            if self.slots[b] is None:
-                req = self.queue.popleft()
-                req.slot = b
-                req.pos = 0
-                self.slots[b] = req
+            if self.slots[b] is not None:
+                continue
+            req = self.queue[0]
+            if self.paged is not None and not self._kv_admit(req):
+                self.kv_deferred_admissions += 1
+                break
+            self.queue.popleft()
+            req.slot = b
+            req.pos = 0
+            req.join_seq = self._join_seq
+            self._join_seq += 1
+            self.slots[b] = req
+
+    def _kv_admit(self, req: Request) -> bool:
+        """Reserve blocks for a joining request's known tokens."""
+        need = self.paged.blocks_for(len(req.tokens))
+        reserve = int(self.kv_watermark * self.paged.num_blocks)
+        if self.num_active > 0 and \
+                need > self.paged.free_blocks - reserve:
+            return False
+        self.paged.allocate(req.rid)
+        if not self.paged.reserve(req.rid, len(req.tokens)):
+            self.paged.free_request(req.rid)
+            return False
+        return True
+
+    def _preempt(self, req: Request) -> None:
+        """Evict a running request to the queue front: its KV blocks
+        are freed and its tokens (prompt + everything already sampled)
+        replay as prefill on re-admission — generated text is a pure
+        function of the tokens, so preemption costs steps, never
+        output."""
+        self.paged.free_request(req.rid)
+        self.slots[req.slot] = None
+        req.slot = -1
+        req.pos = 0
+        req.preemptions += 1
+        self.kv_preemptions += 1
+        self.queue.appendleft(req)
+
+    def _ensure_kv(self) -> None:
+        """Grow each active request's block table to cover this step's
+        position; on pool exhaustion preempt the YOUNGEST active
+        request — possibly the one asking — and retry. Oldest-first
+        service order: an overcommitted pool converges to sequential
+        service (the oldest request keeps its pages and finishes)
+        instead of livelocking."""
+        for req in sorted((r for r in self.slots if r is not None),
+                          key=lambda r: r.join_seq):
+            if req.slot < 0:
+                continue  # preempted at this boundary already
+            while req.slot >= 0 and \
+                    not self.paged.ensure(req.rid, req.pos):
+                active = [r for r in self.slots if r is not None]
+                victim = max(active, key=lambda r: r.join_seq)
+                # a lone request can always claim the whole pool
+                # (submit() rejected anything bigger than it)
+                assert not (victim is req and len(active) == 1), \
+                    "single request exceeded pool capacity"
+                self._preempt(victim)
 
     def _retire(self, req: Request) -> None:
         req.done = True
+        if self.paged is not None:
+            self.paged.free_request(req.rid)
         self.slots[req.slot] = None
         req.slot = -1
         self.finished[req.rid] = req
 
     # ------------------------------------------------------------- step
     def step(self) -> List[int]:
-        """One token-boundary: admit, decode every active slot at its own
-        position, sample/advance, retire. Returns rids retired now."""
+        """One token-boundary: admit, grow/steal KV pages (paged),
+        decode every active slot at its own position, sample/advance,
+        retire. Returns rids retired now."""
         self._admit()
+        if self.paged is not None:
+            self._ensure_kv()
         active = [r is not None for r in self.slots]
         if not any(active):
             return []
@@ -142,9 +274,15 @@ class ContinuousOffloadServer:
             positions[b] = req.pos
             prompt_ids[b] = req.rid
 
+        block_tables = None
+        if self.paged is not None:
+            block_tables = jnp.asarray(self.paged.table_array(
+                [r.rid if r is not None else None for r in self.slots]))
+
         logits, self.state = self.engine.decode_tokens(
             self.state, jnp.asarray(tokens), positions,
-            prompt_ids=prompt_ids, active=active)
+            prompt_ids=prompt_ids, active=active,
+            block_tables=block_tables)
         self._logits = logits
 
         retired: List[int] = []
@@ -195,6 +333,15 @@ class ContinuousOffloadServer:
         s["finished_requests"] = len(self.finished)
         s["queued_requests"] = len(self.queue)
         s["active_requests"] = self.num_active
+        if self.paged is not None:
+            blk_bytes = self.engine.cost.kv_block_bytes(self.kv_block_size)
+            s["kv_num_blocks"] = self.paged.num_blocks
+            s["kv_blocks_in_use"] = self.paged.used_blocks
+            s["kv_blocks_peak"] = self.paged.peak_used
+            s["kv_preemptions"] = self.kv_preemptions
+            s["kv_deferred_admissions"] = self.kv_deferred_admissions
+            s["kv_pool_bytes"] = blk_bytes * self.paged.num_blocks
+            s["kv_bytes_peak"] = blk_bytes * self.paged.peak_used
         return s
 
     def request_stats(self, rid: int) -> Dict[str, float]:
@@ -216,19 +363,22 @@ class OffloadServer:
     def __init__(self, params, cfg, *, cache_slots: int, policy: str = "lru",
                  prefetch: Optional[str] = None, quant: str = "none",
                  hw: Optional[HardwareProfile] = None, overlap: bool = False,
-                 cache_len: int = 512):
+                 cache_len: int = 512, kv_layout: str = "paged",
+                 kv_block_size: int = 16):
         self.cfg = cfg
         self._srv = ContinuousOffloadServer(
             params, cfg, cache_slots=cache_slots, max_batch=1,
             cache_len=cache_len, policy=policy, prefetch=prefetch,
-            quant=quant, hw=hw, overlap=overlap)
+            quant=quant, hw=hw, overlap=overlap, kv_layout=kv_layout,
+            kv_block_size=kv_block_size)
         self.trace = self._srv.trace
         self.engine = self._srv.engine
 
     def complete(self, prompt: Sequence[int], *, max_new: int,
                  temperature: float = 0.0, seed: int = 0) -> List[int]:
-        # requests are sequential here, so the KV allocation can grow to
-        # fit each one (the pre-rework server sized it per request)
+        # requests are sequential here, so the KV allocation (dense
+        # strip or paged pool) can grow to fit each one (the pre-rework
+        # server sized it per request)
         self._srv.ensure_cache_len(len(prompt) + max_new)
         rid = self._srv.submit(prompt, max_new=max_new,
                                temperature=temperature, seed=seed)

@@ -25,6 +25,10 @@ class Request:
     slot: int = -1                # batch row while admitted, -1 otherwise
     pos: int = 0                  # tokens fed so far == next seq position
     eos_hit: bool = False
+    join_seq: int = -1            # admission order (paged preemption
+                                  # evicts the youngest joiner first)
+    preemptions: int = 0          # times evicted from a paged pool and
+                                  # requeued (KV rebuilt from tokens)
 
     # per-request sampling (None -> server defaults)
     temperature: Optional[float] = None

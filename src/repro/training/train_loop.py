@@ -7,7 +7,6 @@ see ``repro.launch.dryrun``).
 from __future__ import annotations
 
 import time
-from functools import partial
 from typing import Callable, Dict, Iterator, Optional
 
 import jax

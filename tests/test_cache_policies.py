@@ -6,8 +6,7 @@ try:
 except ImportError:  # container has no hypothesis: deterministic examples
     from _hypothesis_fallback import given, settings, strategies as st
 
-from repro.core.cache_policies import (LFU, LRU, AgedLFU, Belady, FIFO, LRFU,
-                                       POLICIES, RandomPolicy, make_policy)
+from repro.core.cache_policies import (LFU, LRU, AgedLFU, Belady, POLICIES, make_policy)
 
 
 def run_trace(policy, accesses):

@@ -3,7 +3,6 @@ prefetch interleaving, (1) capacity and slot-consistency invariants
 hold, (2) gathered weights are bit-identical to the store's (the system
 invariant behind 'caching never changes outputs')."""
 import numpy as np
-import jax.numpy as jnp
 
 try:
     from hypothesis import given, settings, strategies as st

@@ -4,9 +4,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.launch.hlo_cost import (CostReport, HloCost, analyze_compiled,
-                                   parse_module, shape_bytes, shape_dims,
-                                   shape_elems)
+from repro.launch.hlo_cost import (HloCost, analyze_compiled, parse_module, shape_bytes, shape_dims, shape_elems)
 
 
 def test_shape_parsing():

@@ -97,6 +97,68 @@ def test_flash_matches_model_blockwise_attention():
                                atol=2e-4)
 
 
+# ------------------------------------------------------ paged attention
+@pytest.mark.parametrize("B,H,KV,hd,N,bs,T", [
+    (2, 4, 2, 64, 8, 8, 3),
+    (3, 4, 4, 64, 10, 16, 2),    # MHA (no grouping)
+    (1, 8, 1, 128, 6, 8, 4),     # MQA, deeper table
+])
+def test_paged_attention_allclose(B, H, KV, hd, N, bs, T):
+    q = randn((B, H, hd), jnp.float32)
+    kp = randn((N, bs, KV, hd), jnp.float32)
+    vp = randn((N, bs, KV, hd), jnp.float32)
+    bt = jnp.asarray(RNG.integers(0, N, (B, T)), jnp.int32)
+    pos = jnp.asarray(RNG.integers(0, T * bs, (B,)), jnp.int32)
+    want = ops.paged_attention(q, kp, vp, bt, pos, impl="xla")
+    got = ops.paged_attention(q, kp, vp, bt, pos, impl="pallas_interpret")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_paged_attention_matches_contiguous_flash():
+    """A trivial identity block table turns the paged kernel into plain
+    decode attention: it must agree with the flash oracle over the same
+    contiguous K/V."""
+    B, H, KV, hd, bs, T = 2, 4, 2, 64, 8, 4
+    q = randn((B, H, hd), jnp.float32)
+    kp = randn((T, bs, KV, hd), jnp.float32)
+    vp = randn((T, bs, KV, hd), jnp.float32)
+    bt = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    pos = jnp.asarray([T * bs - 1] * B, jnp.int32)      # attend to all
+    got = ops.paged_attention(q, kp, vp, bt, pos, impl="pallas_interpret")
+    k = kp.reshape(1, T * bs, KV, hd).repeat(B, 0)
+    v = vp.reshape(1, T * bs, KV, hd).repeat(B, 0)
+    want = ops.flash_attention(q[:, None], k, v, causal=False,
+                               impl="xla")[:, 0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_gqa_decode_paged_with_interpret_kernel_matches_xla():
+    """Model-level: the paged decode path through the Pallas kernel
+    (interpret) == its exact jnp gather path."""
+    import dataclasses
+    from repro.configs import get_config, reduced
+    from repro.models import attention as attn_lib
+    cfg = dataclasses.replace(
+        reduced(get_config("mixtral-8x7b"), layers=1, d_model=64),
+        dtype="float32")
+    p = attn_lib.init_gqa(jax.random.PRNGKey(0), cfg, jnp.float32)
+    pool = attn_lib.gqa_paged_cache_init(cfg, 8, 8, jnp.float32)
+    bt = jnp.asarray([[3, 1], [5, 0]], jnp.int32)
+    pos = jnp.asarray([9, 12], jnp.int32)
+    x = randn((2, 1, cfg.d_model), jnp.float32)
+    y_x, _ = attn_lib.gqa_decode_paged(p, cfg, x, pool, pos, bt)
+    old = attn_lib.PAGED_ATTN_IMPL
+    try:
+        attn_lib.PAGED_ATTN_IMPL = "pallas_interpret"
+        y_k, _ = attn_lib.gqa_decode_paged(p, cfg, x, pool, pos, bt)
+    finally:
+        attn_lib.PAGED_ATTN_IMPL = old
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_x),
+                               rtol=2e-4, atol=2e-4)
+
+
 # ------------------------------------------------------------ ssd_chunk
 @pytest.mark.parametrize("G,Q,H,P,N,bh", [
     (2, 32, 8, 16, 24, 4),
@@ -147,7 +209,6 @@ def test_gqa_full_with_interpret_kernel_matches_xla():
     import dataclasses
     from repro.configs import get_config, reduced
     from repro.models import attention as attn_lib
-    from repro.models import transformer as tf
     cfg = dataclasses.replace(
         reduced(get_config("qwen2.5-3b"), layers=1, d_model=64),
         dtype="float32")

@@ -2,14 +2,13 @@
 each assigned arch runs one forward/train step + one decode step on CPU
 with correct shapes and no NaNs. Full configs are exercised only via
 the dry-run."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import INPUT_SHAPES, get_config, list_archs, reduced
+from repro.configs import INPUT_SHAPES, get_config, list_archs
 from repro.configs.all_configs import ASSIGNED
 from repro.models import transformer as tf
 from repro.training.optimizer import AdamWConfig, adamw_init, adamw_update

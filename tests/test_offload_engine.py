@@ -7,11 +7,10 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
-from repro.core import OffloadEngine, TraceRecorder, make_policy
+from repro.core import OffloadEngine, make_policy
 from repro.core.expert_store import ExpertStore
 from repro.models import transformer as tf
 
-from conftest import tiny
 
 
 @pytest.fixture(scope="module")

@@ -10,7 +10,6 @@ change every speed statistic but never a single generated token.
 import dataclasses
 
 import jax
-import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
@@ -138,6 +137,69 @@ def test_temperature_sampling_is_batch_composition_independent(mixtral_setup):
         srv.run()
         outs.append(srv.result(rid))
     assert outs[0] == outs[1]
+
+
+# ------------------------------------------------- paged KV equivalence
+def test_paged_batch1_matches_generate_trace_row_for_trace_row(mixtral_setup):
+    """The paged server (default layout) reproduces OffloadEngine.generate
+    token-for-token AND trace-row-for-trace-row at T=0: every recorded
+    field of every (step, layer) row is identical, so paging is invisible
+    to the entire accounting stack, not just to the sampled tokens."""
+    cfg, params = mixtral_setup
+    ref, eng = _reference(params, cfg, PROMPTS[0], 10,
+                          cache_slots=4, policy="lru")
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, policy="lru",
+                                  max_batch=1, cache_len=32)
+    assert srv.kv_layout == "paged" and srv.paged is not None
+    rid = srv.submit(PROMPTS[0], max_new=10)
+    srv.run()
+    assert srv.result(rid) == ref
+    assert srv.engine.stats() == eng.stats()
+    assert len(srv.trace.steps) == len(eng.trace.steps)
+    for got, want in zip(srv.trace.steps, eng.trace.steps):
+        got_d, want_d = dataclasses.asdict(got), dataclasses.asdict(want)
+        got_d.pop("prompt_id"), want_d.pop("prompt_id")  # server-assigned id
+        assert got_d == want_d
+
+
+@pytest.mark.parametrize("max_batch", [1, 2, 3])
+def test_paged_matches_dense_token_for_token(mixtral_setup, max_batch):
+    """Same workload through the paged pool and the dense per-slot
+    layout: identical tokens AND identical engine accounting at every
+    batch size (the KV layout never leaks into routing or the clock)."""
+    cfg, params = mixtral_setup
+    outs = {}
+    stats = {}
+    for layout in ("dense", "paged"):
+        srv = ContinuousOffloadServer(params, cfg, cache_slots=4,
+                                      policy="lru", max_batch=max_batch,
+                                      cache_len=32, kv_layout=layout,
+                                      kv_block_size=8)
+        rids = [srv.submit(p, max_new=6) for p in PROMPTS]
+        srv.run()
+        outs[layout] = [srv.result(r) for r in rids]
+        stats[layout] = srv.engine.stats()
+    assert outs["paged"] == outs["dense"]
+    assert stats["paged"] == stats["dense"]
+
+
+def test_paged_staggered_join_retire_block_churn(mixtral_setup):
+    """Staggered joins/retires churn the block pool (alloc/free at
+    request boundaries) while every request still emits its solo greedy
+    continuation; the pool drains to zero when the queue does."""
+    cfg, params = mixtral_setup
+    refs = [_reference(params, cfg, p, 6, cache_slots=4, policy="lru")[0]
+            for p in PROMPTS]
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, policy="lru",
+                                  max_batch=2, cache_len=32, kv_block_size=4)
+    rids = [srv.submit(p, max_new=6) for p in PROMPTS]
+    srv.run()
+    for rid, ref in zip(rids, refs):
+        assert srv.result(rid) == ref
+    s = srv.stats()
+    assert s["kv_blocks_in_use"] == 0
+    assert s["kv_blocks_peak"] >= 2  # two requests co-resident at some point
+    srv.paged.check_no_aliasing()
 
 
 # --------------------------------------------- shared-cache accounting

@@ -6,7 +6,6 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.configs import get_config, reduced
@@ -79,7 +78,6 @@ def test_sim_speed_monotone_in_cache_size(trained_mixtral):
 
 # ----------------------------------------------------- sharding support
 def test_sanitize_spec_drops_nondivisible_axes():
-    import os
     from jax.sharding import PartitionSpec as P
     mesh = jax.make_mesh((1,), ("model",))
 

@@ -1,5 +1,4 @@
 """Trace statistics + cost-model tests (paper Tables 1-2, §5.4)."""
-import math
 
 import pytest
 
