@@ -1,0 +1,77 @@
+"""CI gate: steps-to-drain must not regress >20% vs the committed
+baseline.
+
+``bench_serving_offload.run_scheduler_sweep`` writes its fresh metrics
+to ``benchmarks/results/BENCH_serving.json``; the committed baseline
+lives at the repo root as ``BENCH_serving.json``. This script compares
+the two and exits non-zero when any cell's ``steps_to_drain`` exceeds
+the baseline by more than ``--tolerance`` (default 0.20).
+
+steps_to_drain is the gate metric because it is DETERMINISTIC: with
+eos off it depends only on prompt lengths, budgets, and the scheduler —
+never on token values or wall-clock — so it is identical across
+machines and a >20% move always means the scheduling behavior changed.
+A cell missing from the fresh run also fails (a silently dropped sweep
+cell must not pass the gate). When the workload improves or the sweep
+changes shape intentionally, regenerate the baseline:
+
+    PYTHONPATH=src python -m benchmarks.run --only serving_offload_batched
+    cp benchmarks/results/BENCH_serving.json BENCH_serving.json
+
+Run:  PYTHONPATH=src python -m benchmarks.check_serving_regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "BENCH_serving.json")
+CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "BENCH_serving.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", default=CURRENT)
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed fractional steps_to_drain growth")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)
+    with open(args.current) as f:
+        cur = json.load(f)
+
+    if cur.get("workload") != base.get("workload"):
+        print("note: workload changed vs baseline — comparing anyway; "
+              "regenerate BENCH_serving.json if this is intentional")
+
+    failed = []
+    print(f"{'cell':24s} {'base':>6s} {'now':>6s} {'limit':>6s}")
+    for cell, b in sorted(base["cells"].items()):
+        want = b["steps_to_drain"]
+        limit = want * (1.0 + args.tolerance)
+        got = cur["cells"].get(cell, {}).get("steps_to_drain")
+        if got is None:
+            print(f"{cell:24s} {want:6d} {'-':>6s} {limit:6.1f}  MISSING")
+            failed.append(cell)
+            continue
+        flag = "" if got <= limit else "  REGRESSED"
+        print(f"{cell:24s} {want:6d} {got:6d} {limit:6.1f}{flag}")
+        if got > limit:
+            failed.append(cell)
+
+    if failed:
+        print(f"FAIL: steps_to_drain regressed >{args.tolerance:.0%} "
+              f"in {len(failed)} cell(s): {', '.join(failed)}")
+        return 1
+    print("OK: steps_to_drain within tolerance for every cell")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -209,8 +209,9 @@ class AgedLFU(LFU):
 
     name = "aged-lfu"
 
-    def __init__(self, capacity: int, *, decay: float = 0.5, age_every: int = 32):
-        super().__init__(capacity)
+    def __init__(self, capacity: int, *, decay: float = 0.5,
+                 age_every: int = 32, persistent_counts: bool = True):
+        super().__init__(capacity, persistent_counts=persistent_counts)
         self._decay = decay
         self._age_every = age_every
         self._ffreq: dict = {}
@@ -231,6 +232,14 @@ class AgedLFU(LFU):
             raise RuntimeError("all cached keys pinned")
         return min(cand,
                    key=lambda k: (self._ffreq.get(k, 0.0), self._last.get(k, -1)))
+
+    def remove(self, key):
+        # the inherited remove cleared only LFU's _freq/_last, leaving
+        # _ffreq (the dict this class actually scores from) to grow
+        # unboundedly and to ignore persistent_counts=False entirely
+        super().remove(key)
+        if not self._persistent:
+            self._ffreq.pop(key, None)
 
 
 class LRFU(CachePolicy):

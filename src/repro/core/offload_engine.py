@@ -291,7 +291,6 @@ class OffloadEngine:
                     p_l, cfg, h, state["layers"][l], pos_vec, block_tables)
 
             # --- speculative guess for layer l+1 (paper §3.2) ---------
-            guess: Tuple[int, ...] = ()
             if self.spec is not None and l + 1 < cfg.num_layers:
                 p_next = _layer_slice(params["layers"], l + 1)
                 guess = self.spec.guess(h[act_rows], p_next["ln2"],
@@ -299,20 +298,27 @@ class OffloadEngine:
                 moved = self.caches[l + 1].prefetch(guess)
                 step_prefetch += len(moved)
                 pending[l + 1] = (guess, tuple(moved))
-            elif self.markov is not None and l + 1 < cfg.num_layers:
-                prev = self._prev_acts.get(l, ())
-                if prev:
-                    guess = self.markov.predict(l, prev)
-                    moved = self.caches[l + 1].prefetch(guess)
-                    step_prefetch += len(moved)
-                    pending[l + 1] = (guess, tuple(moved))
 
             pg, pm = pending.get(l, ((), ()))
             h, acts, misses = self._moe_offloaded(
                 p_l, l, h, pg, pm, prompt_ids, token_indices, active)
             step_misses += misses
-            if self.markov is not None and l > 0:
-                self.markov.update(l - 1, self._prev_acts.get(l - 1, ()), acts)
+            if self.markov is not None:
+                if l > 0:
+                    self.markov.update(l - 1, self._prev_acts.get(l - 1, ()),
+                                       acts)
+                if l + 1 < cfg.num_layers:
+                    # predict l+1 from THIS token's layer-l set — the
+                    # same-token l -> l+1 transition the table is
+                    # trained on. (Guessing from self._prev_acts[l]
+                    # here fed predict the PREVIOUS token's layer-l
+                    # set: train/predict skew that wasted the learned
+                    # transitions whenever consecutive tokens routed
+                    # differently — regression-tested.)
+                    guess = self.markov.predict(l, acts)
+                    moved = self.caches[l + 1].prefetch(guess)
+                    step_prefetch += len(moved)
+                    pending[l + 1] = (guess, tuple(moved))
             self._prev_acts[l] = acts
 
         logits = tf.logits_from_hidden(params, cfg, h)[:, 0]
@@ -326,6 +332,51 @@ class OffloadEngine:
         self.tokens_done += n_active
         self._steps_done += 1
         return logits, state
+
+    # ------------------------------------------------------------------
+    def prefill_tokens(self, state, tokens, positions: Sequence[int], *,
+                       token_indices: Optional[Sequence[int]] = None,
+                       prompt_ids: Optional[Sequence[int]] = None,
+                       active: Optional[Sequence[bool]] = None,
+                       block_tables=None):
+        """Push N KNOWN tokens through ONE engine step (chunked prefill).
+
+        ``tokens`` is a flat [N] (or [N,1]) int32 vector of *virtual
+        rows*: row j is one known token at sequence position
+        ``positions[j]``. Rows belonging to the same request (equal
+        ``prompt_ids`` entries, consecutive positions, identical
+        ``block_tables`` rows) form a chunk. Two properties make a
+        chunk bit-exact with feeding the same tokens one step at a
+        time (test-enforced, including after preemption replay):
+
+        * the paged attention kernels scatter EVERY row's new K/V into
+          the pool before any row gathers, and mask with
+          ``idx <= pos`` — so within a step, later positions of a
+          chunk see earlier ones' K/V and nothing of the future, and
+        * a row's numerics are independent of the batch it is embedded
+          in (the batched kernels are row-wise; empirically bitwise
+          stable on this backend), so the virtual-row batch runs the
+          *literally same* per-row computation as the one-token path.
+
+        The MoE side is one batched union access per chunk: all rows'
+        expert sets union into a single cache access per layer, so a
+        chunk's misses are paid once, and the simulated clock prices
+        one step serving N tokens — that amortization is the prefill
+        throughput win.
+
+        Requires paged KV (``block_tables`` [N, T]; replicate a
+        request's block-table row across its chunk): dense layouts
+        address KV by batch row, which virtual rows break. Returns
+        (logits [N, V], state); callers sample from the LAST row of a
+        request's final chunk and discard the rest.
+        """
+        assert block_tables is not None, \
+            "chunked prefill requires a paged KV pool (block_tables)"
+        toks = jnp.asarray(tokens, jnp.int32).reshape(-1, 1)
+        return self.decode_tokens(state, toks, list(positions),
+                                  token_indices=token_indices,
+                                  prompt_ids=prompt_ids, active=active,
+                                  block_tables=block_tables)
 
     # ------------------------------------------------------------------
     def generate(self, prompt: Sequence[int], n_new: int, *,
@@ -356,7 +407,12 @@ class OffloadEngine:
         return out
 
     # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, float]:
+    def stats(self, *, kv_tokens: float = 0.0) -> Dict[str, float]:
+        """Aggregate counters. ``kv_tokens`` is the peak number of KV
+        token-slots resident alongside the experts (a serving layer
+        passes its paged pool's peak block occupancy * block_size);
+        the bare engine's dense per-call state is transient and priced
+        at 0 by default."""
         hits = sum(c.hits for c in self.caches)
         misses = sum(c.misses for c in self.caches)
         pre = sum(c.prefetches for c in self.caches)
@@ -373,5 +429,6 @@ class OffloadEngine:
             "sim_tokens_per_s": self.tokens_done / self.sim_time
             if self.sim_time else 0.0,
             "peak_memory_bytes": self.cost.peak_memory_bytes(
-                self.cfg.num_experts - self.cache_slots),
+                self.cfg.num_experts - self.cache_slots,
+                kv_tokens=kv_tokens),
         }

@@ -101,7 +101,11 @@ class PagedKVCache:
         return True
 
     def ensure(self, rid: int, pos: int) -> bool:
-        """Make position ``pos`` addressable (at most one new block)."""
+        """Make position ``pos`` addressable. One-token decode grows by
+        at most one block; a chunked prefill passes the chunk's LAST
+        position and may claim several blocks at once — ``reserve`` is
+        all-or-nothing either way, so a failed multi-block grow leaves
+        the table untouched for the preempt-and-retry loop."""
         return self.reserve(rid, pos + 1)
 
     def free_request(self, rid: int) -> List[int]:

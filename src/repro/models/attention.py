@@ -363,6 +363,17 @@ def gqa_decode_paged(p, cfg, x, cache, pos_vec, block_tables):
     rows are exact no-ops in the fp32 accumulation (test-enforced
     token-for-token equality). Padded/stale table entries are
     unreachable for the same reason.
+
+    Multi-position append (chunked prefill) contract: several rows MAY
+    share one request's table, at DISTINCT consecutive positions —
+    their (block, offset) scatter cells are then distinct, every
+    scatter lands before any gather reads the pool, and the causal
+    mask keeps row j blind to positions > pos_vec[j]. A chunk of N
+    known tokens fed as N such "virtual rows" in one call is therefore
+    bit-exact with N single-token calls (test-enforced, see
+    ``OffloadEngine.prefill_tokens``). Two rows at the SAME (block,
+    offset) remain undefined — callers must never duplicate positions
+    within a request.
     """
     B = x.shape[0]
     bs = cache["k"].shape[1]
@@ -563,9 +574,9 @@ def mla_paged_cache_init(cfg, num_blocks: int, block_size: int, dtype):
 
 def mla_decode_paged(p, cfg, x, cache, pos_vec, block_tables):
     """Absorbed MLA decode through a block table (see
-    ``gqa_decode_paged`` for the layout/exactness contract — identical
-    here, with the [T*bs] gathered strip standing in for the dense
-    [L] latent cache)."""
+    ``gqa_decode_paged`` for the layout/exactness and multi-position
+    append contracts — identical here, with the [T*bs] gathered strip
+    standing in for the dense [L] latent cache)."""
     B = x.shape[0]
     bs = cache["latent"].shape[1]
     positions = jnp.reshape(pos_vec, (B, 1)).astype(jnp.int32)

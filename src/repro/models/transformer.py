@@ -369,7 +369,10 @@ def _attn_decode_multipos(p, cfg, h, cache, pos_vec):
 def _attn_decode_paged(p, cfg, h, cache, pos_vec, block_tables):
     """Per-row-position decode over a paged KV pool: ``cache`` is one
     layer's block pool and ``block_tables [B, T]`` maps each row's
-    logical blocks to physical ones (see ``repro.core.paged_kv``)."""
+    logical blocks to physical ones (see ``repro.core.paged_kv``).
+    Rows may share a table at distinct positions (chunked prefill's
+    virtual rows) — see the multi-position append contract on
+    ``repro.models.attention.gqa_decode_paged``."""
     x = rms_norm(h, p["ln1"], cfg.norm_eps)
     if cfg.use_mla:
         y, cache = attn.mla_decode_paged(p["attn"], cfg, x, cache, pos_vec,

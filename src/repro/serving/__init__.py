@@ -2,6 +2,10 @@ from repro.serving.engine import ServingEngine
 from repro.serving.offload_serving import ContinuousOffloadServer, OffloadServer
 from repro.serving.request import Request
 from repro.serving.sampler import request_key, sample_token
+from repro.serving.scheduler import (SCHEDULERS, PriorityScheduler, Scheduler,
+                                     SjfScheduler, make_scheduler)
 
 __all__ = ["ServingEngine", "ContinuousOffloadServer", "OffloadServer",
-           "Request", "request_key", "sample_token"]
+           "Request", "request_key", "sample_token", "Scheduler",
+           "SjfScheduler", "PriorityScheduler", "SCHEDULERS",
+           "make_scheduler"]

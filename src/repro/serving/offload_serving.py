@@ -28,6 +28,27 @@ attention path is bit-exact with the dense one, so both layouts — and
 ``OffloadEngine.generate`` — produce identical tokens, traces, and
 simulated clocks at temperature 0 (test-enforced).
 
+Long prompts need not stream one token per step: with
+``prefill_chunk > 1`` (paged layout only) a catching-up request pushes
+a CHUNK of its known tokens per step as *virtual rows* — extra batch
+rows at consecutive positions sharing the request's block-table row —
+through the same batched paged decode. The kernels scatter every row's
+K/V before any row gathers and mask ``idx <= pos``, so a chunk is
+bit-exact with the one-token-per-step replay (test-enforced, including
+post-preemption replays). A per-step token budget (``step_tokens``)
+interleaves those chunks with decode rows: every active request
+advances at least one token per step, so a long prefill can no longer
+starve co-scheduled decodes while it catches up.
+
+WHO advances, joins, and is preempted is delegated to a pluggable
+``Scheduler`` (``repro.serving.scheduler``): ``fifo`` (default,
+preserves the original hardcoded behavior exactly), ``sjf``
+(shortest-remaining-job), and ``priority`` (per-tenant fairness scored
+from the per-request trace slices the server accumulates in
+``tenant_service``). Scheduling only reorders WHEN tokens are
+computed — per-request outputs are byte-identical under every
+scheduler at temperature 0 (test-enforced).
+
 ``OffloadServer`` keeps the original one-request-at-a-time API and is a
 thin wrapper over a ``max_batch=1`` continuous server; batch-of-1
 continuous serving reproduces ``OffloadEngine.generate`` token for
@@ -53,6 +74,7 @@ from repro.core.paged_kv import PagedKVCache
 from repro.core.trace import TraceRecorder
 from repro.serving.request import Request
 from repro.serving.sampler import request_key, sample_token
+from repro.serving.scheduler import Scheduler, make_scheduler
 
 
 class ContinuousOffloadServer:
@@ -66,12 +88,31 @@ class ContinuousOffloadServer:
                  top_p: float = 1.0, seed: int = 0,
                  kv_layout: str = "paged", kv_block_size: int = 16,
                  kv_num_blocks: Optional[int] = None,
-                 kv_watermark: float = 0.0):
+                 kv_watermark: float = 0.0,
+                 scheduler="fifo", prefill_chunk: int = 1,
+                 step_tokens: Optional[int] = None):
         assert max_batch >= 1
         assert kv_layout in ("paged", "dense")
         assert 0.0 <= kv_watermark < 1.0
+        assert prefill_chunk >= 1
+        assert prefill_chunk == 1 or kv_layout == "paged", \
+            "chunked prefill needs paged KV (virtual rows share a " \
+            "block-table row; dense KV is addressed by batch row)"
         self.cfg = cfg
         self.max_batch = max_batch
+        self.prefill_chunk = prefill_chunk
+        # per-step token budget: every active request is guaranteed one
+        # token; the leftover goes to catching-up rows (scheduler order)
+        self.step_tokens = step_tokens if step_tokens is not None \
+            else max_batch * prefill_chunk
+        assert self.step_tokens >= max_batch, \
+            "step_tokens must cover one token per slot"
+        # fixed virtual-row batch width (stable shapes -> one XLA trace)
+        self._step_rows = max_batch if prefill_chunk == 1 \
+            else self.step_tokens
+        self.scheduler: Scheduler = make_scheduler(scheduler) \
+            if isinstance(scheduler, str) else scheduler
+        self.scheduler.bind(self)
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.temperature = temperature
@@ -104,12 +145,16 @@ class ContinuousOffloadServer:
         self._join_seq = 0
         self.kv_preemptions = 0
         self.kv_deferred_admissions = 0
+        self.step_count = 0            # completed engine steps
+        self.tenant_service: Dict[str, int] = {}  # tokens served/tenant
+        self.partial_rids: set = set()  # unfinished rids of the last run()
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: Sequence[int], *, max_new: int,
                temperature: Optional[float] = None,
                top_p: Optional[float] = None,
-               seed: Optional[int] = None) -> int:
+               seed: Optional[int] = None,
+               priority: int = 0, tenant: Optional[str] = None) -> int:
         """Queue a request; returns its id (the trace prompt_id).
 
         Rejects (raises ValueError) a request that could NEVER be
@@ -130,7 +175,9 @@ class ContinuousOffloadServer:
                 f"request needs {total} KV rows, cache_len={self.cache_len}")
         rid = self.engine.new_prompt(reset_context=False)
         req = Request(prompt=list(prompt), max_new=max_new, rid=rid,
-                      temperature=temperature, top_p=top_p, seed=seed)
+                      temperature=temperature, top_p=top_p, seed=seed,
+                      priority=priority, tenant=tenant,
+                      submit_step=self.step_count)
         self.queue.append(req)
         return rid
 
@@ -167,33 +214,36 @@ class ContinuousOffloadServer:
     def _admit(self) -> None:
         """Fill free slots from the queue (a token-boundary join).
 
-        Paged admission is PAGE-AWARE: the head request joins only when
-        the pool can hold its known tokens while keeping
-        ``kv_watermark`` of the blocks free for running requests'
-        decode growth (an idle server ignores the watermark — sole
-        occupancy cannot starve anyone). A blocked head DEFERS the
-        whole queue (FIFO, no overtaking) and is counted in
+        Candidates are tried in ``scheduler.admission_order`` (fifo:
+        arrival order). Paged admission is PAGE-AWARE: a candidate
+        joins only when the pool can hold its known tokens while
+        keeping ``kv_watermark`` of the blocks free for running
+        requests' decode growth (an idle server ignores the watermark —
+        sole occupancy cannot starve anyone). A blocked candidate
+        DEFERS everything behind it (no overtaking past a blocked
+        request, whatever the scheduler — big requests cannot be
+        starved by a stream of small ones) and is counted in
         ``kv_deferred_admissions``."""
         if not self.queue:
             return
         if self.num_active == 0:
             # idle server: same prefetch state as a fresh generate()
             self.engine.reset_prefetch_context()
-        for b in range(self.max_batch):
-            if not self.queue:
+        free = [b for b in range(self.max_batch) if self.slots[b] is None]
+        for req in self.scheduler.admission_order(self.queue):
+            if not free:
                 break
-            if self.slots[b] is not None:
-                continue
-            req = self.queue[0]
             if self.paged is not None and not self._kv_admit(req):
                 self.kv_deferred_admissions += 1
                 break
-            self.queue.popleft()
-            req.slot = b
+            self.queue.remove(req)
+            req.slot = free.pop(0)
             req.pos = 0
             req.join_seq = self._join_seq
             self._join_seq += 1
-            self.slots[b] = req
+            if req.admit_step < 0:
+                req.admit_step = self.step_count
+            self.slots[req.slot] = req
 
     def _kv_admit(self, req: Request) -> bool:
         """Reserve blocks for a joining request's known tokens."""
@@ -222,29 +272,36 @@ class ContinuousOffloadServer:
         self.kv_preemptions += 1
         self.queue.appendleft(req)
 
-    def _ensure_kv(self) -> None:
+    def _ensure_kv(self, chunks: Optional[Dict[int, int]] = None) -> None:
         """Grow each active request's block table to cover this step's
-        position; on pool exhaustion preempt the YOUNGEST active
-        request — possibly the one asking — and retry. Oldest-first
-        service order: an overcommitted pool converges to sequential
-        service (the oldest request keeps its pages and finishes)
-        instead of livelocking."""
-        for req in sorted((r for r in self.slots if r is not None),
-                          key=lambda r: r.join_seq):
+        chunk (``chunks[rid]`` tokens from ``pos``; default 1); on pool
+        exhaustion preempt ``scheduler.choose_victim`` — possibly the
+        one asking — and retry. Requests are served in
+        ``scheduler.chunk_order`` (fifo: oldest first), so whoever the
+        scheduler favors keeps its pages and an overcommitted pool
+        converges to sequential service instead of livelocking.
+        Preemption frees at least one block per round (every admitted
+        request holds blocks for its known tokens), so the retry loop
+        terminates."""
+        chunks = chunks or {}
+        for req in self.scheduler.chunk_order(
+                [r for r in self.slots if r is not None]):
             if req.slot < 0:
                 continue  # preempted at this boundary already
-            while req.slot >= 0 and \
-                    not self.paged.ensure(req.rid, req.pos):
+            while req.slot >= 0 and not self.paged.reserve(
+                    req.rid, req.pos + chunks.get(req.rid, 1)):
                 active = [r for r in self.slots if r is not None]
-                victim = max(active, key=lambda r: r.join_seq)
+                victim = self.scheduler.choose_victim(active)
                 # a lone request can always claim the whole pool
-                # (submit() rejected anything bigger than it)
+                # (submit() rejected anything bigger than it, and a
+                # chunk never reaches past the known tokens)
                 assert not (victim is req and len(active) == 1), \
                     "single request exceeded pool capacity"
                 self._preempt(victim)
 
     def _retire(self, req: Request) -> None:
         req.done = True
+        req.finish_step = self.step_count
         if self.paged is not None:
             self.paged.free_request(req.rid)
         self.slots[req.slot] = None
@@ -252,45 +309,104 @@ class ContinuousOffloadServer:
         self.finished[req.rid] = req
 
     # ------------------------------------------------------------- step
+    def _plan_chunks(self, active: List[Request]) -> Dict[int, int]:
+        """Split this step's token budget: every active request gets 1
+        (decode rows need exactly one), then the leftover goes to
+        catching-up rows in ``scheduler.chunk_order``, each up to
+        ``prefill_chunk`` known tokens total."""
+        chunks = {r.rid: 1 for r in active}
+        left = self.step_tokens - len(active)
+        if self.prefill_chunk > 1 and left > 0:
+            for r in self.scheduler.chunk_order(active):
+                if left <= 0:
+                    break
+                unfed = len(r.tokens) - r.pos
+                extra = min(self.prefill_chunk - 1, unfed - 1, left)
+                if extra > 0:
+                    chunks[r.rid] += extra
+                    left -= extra
+        return chunks
+
     def step(self) -> List[int]:
-        """One token-boundary: admit, grow/steal KV pages (paged),
-        decode every active slot at its own position, sample/advance,
-        retire. Returns rids retired now."""
+        """One token-boundary: admit, plan chunk budgets, grow/steal KV
+        pages (paged), decode every active slot — ``chunks[rid]``
+        virtual rows at consecutive positions when catching up —
+        sample/advance, retire. Returns rids retired now."""
         self._admit()
+        chunks = self._plan_chunks([r for r in self.slots if r is not None])
         if self.paged is not None:
-            self._ensure_kv()
+            self._ensure_kv(chunks)
         active = [r is not None for r in self.slots]
         if not any(active):
             return []
 
         B = self.max_batch
-        tokens = np.zeros((B, 1), np.int32)
-        positions = [0] * B
-        prompt_ids = [0] * B
-        for b, req in enumerate(self.slots):
-            if req is None:
-                continue
-            tokens[b, 0] = req.tokens[req.pos]
-            positions[b] = req.pos
-            prompt_ids[b] = req.rid
+        last_row: Dict[int, int] = {}
+        if self.prefill_chunk == 1:
+            # original fixed-slot layout: row b IS slot b (required by
+            # the dense KV path, which addresses KV by batch row)
+            tokens = np.zeros((B, 1), np.int32)
+            positions = [0] * B
+            prompt_ids = [0] * B
+            row_rids: List[Optional[int]] = [None] * B
+            row_active = active
+            for b, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                tokens[b, 0] = req.tokens[req.pos]
+                positions[b] = req.pos
+                prompt_ids[b] = req.rid
+                row_rids[b] = req.rid
+                last_row[req.rid] = b
+        else:
+            # virtual-row layout: request r contributes chunks[r.rid]
+            # rows at consecutive positions sharing its block-table
+            # row; pad with inactive sink rows to a fixed width
+            toks: List[int] = []
+            positions = []
+            prompt_ids = []
+            row_rids = []
+            row_active = []
+            for req in self.slots:
+                if req is None:
+                    continue
+                for j in range(chunks[req.rid]):
+                    toks.append(req.tokens[req.pos + j])
+                    positions.append(req.pos + j)
+                    prompt_ids.append(req.rid)
+                    row_rids.append(req.rid)
+                    row_active.append(True)
+                last_row[req.rid] = len(toks) - 1
+            while len(toks) < self._step_rows:
+                toks.append(0)
+                positions.append(0)
+                prompt_ids.append(0)
+                row_rids.append(None)
+                row_active.append(False)
+            tokens = np.asarray(toks, np.int32).reshape(-1, 1)
 
         block_tables = None
         if self.paged is not None:
-            block_tables = jnp.asarray(self.paged.table_array(
-                [r.rid if r is not None else None for r in self.slots]))
+            block_tables = jnp.asarray(self.paged.table_array(row_rids))
 
         logits, self.state = self.engine.decode_tokens(
             self.state, jnp.asarray(tokens), positions,
-            prompt_ids=prompt_ids, active=active,
+            prompt_ids=prompt_ids, active=row_active,
             block_tables=block_tables)
         self._logits = logits
+        self.step_count += 1
 
         retired: List[int] = []
         for b in range(B):
             req = self.slots[b]
             if req is None:
                 continue
-            req.pos += 1
+            n = chunks[req.rid]
+            req.pos += n
+            req.steps_advanced += 1
+            if req.tenant is not None:
+                self.tenant_service[req.tenant] = \
+                    self.tenant_service.get(req.tenant, 0) + n
             if req.pos < len(req.tokens):
                 continue  # still streaming known tokens (prefill)
             if req.eos_hit or len(req.out) >= req.max_new:
@@ -299,7 +415,7 @@ class ContinuousOffloadServer:
                 self._retire(req)
                 retired.append(req.rid)
                 continue
-            req.out.append(self._sample(req, logits[b]))
+            req.out.append(self._sample(req, logits[last_row[req.rid]]))
             if self.eos_id is not None and req.out[-1] == self.eos_id:
                 req.eos_hit = True
         return retired
@@ -315,24 +431,45 @@ class ContinuousOffloadServer:
                                 top_p=top_p)[0])
 
     def run(self, *, max_steps: Optional[int] = None) -> Dict[int, List[int]]:
-        """Drain the queue; returns {rid: full token sequence}."""
+        """Drain the queue; returns {rid: full token sequence}.
+
+        A truncated run (``max_steps``) ALSO returns the partial token
+        sequences of in-flight and still-queued requests instead of
+        silently dropping them; their rids are flagged in
+        ``self.partial_rids`` (empty after a full drain). The server
+        keeps their state, so a later ``run()`` resumes exactly where
+        the truncation stopped and completes the same sequences."""
         steps = 0
         while self.pending:
             self.step()
             steps += 1
             if max_steps is not None and steps >= max_steps:
                 break
-        return {rid: r.tokens for rid, r in self.finished.items()}
+        out = {rid: r.tokens for rid, r in self.finished.items()}
+        self.partial_rids = set()
+        for r in [r for r in self.slots if r is not None] + list(self.queue):
+            out[r.rid] = r.tokens
+            self.partial_rids.add(r.rid)
+        return out
 
     def result(self, rid: int) -> List[int]:
         return self.finished[rid].tokens
 
     # ------------------------------------------------------------ stats
     def stats(self) -> Dict[str, float]:
-        s = self.engine.stats()
+        # serving-mode peak memory prices the KV pool's peak block
+        # occupancy alongside the resident experts (the bare engine's
+        # kv_tokens=0 default covers only the demo loop)
+        kv_tokens = float(self.paged.peak_used * self.kv_block_size) \
+            if self.paged is not None else 0.0
+        s = self.engine.stats(kv_tokens=kv_tokens)
         s["finished_requests"] = len(self.finished)
         s["queued_requests"] = len(self.queue)
         s["active_requests"] = self.num_active
+        s["server_steps"] = self.step_count
+        fin = list(self.finished.values())
+        s["mean_wait_steps"] = (
+            sum(r.wait_steps() for r in fin) / len(fin)) if fin else 0.0
         if self.paged is not None:
             blk_bytes = self.engine.cost.kv_block_bytes(self.kv_block_size)
             s["kv_num_blocks"] = self.paged.num_blocks

@@ -25,10 +25,22 @@ class Request:
     slot: int = -1                # batch row while admitted, -1 otherwise
     pos: int = 0                  # tokens fed so far == next seq position
     eos_hit: bool = False
-    join_seq: int = -1            # admission order (paged preemption
+    join_seq: int = -1            # admission order (fifo preemption
                                   # evicts the youngest joiner first)
     preemptions: int = 0          # times evicted from a paged pool and
                                   # requeued (KV rebuilt from tokens)
+
+    # --- scheduling inputs (see repro.serving.scheduler) --------------
+    priority: int = 0             # higher admits first under "priority"
+    tenant: Optional[str] = None  # fairness group under "priority"
+
+    # --- latency accounting (server step counter timestamps) ----------
+    submit_step: int = -1         # server step count at submit()
+    admit_step: int = -1          # first admission (queue wait ends)
+    finish_step: int = -1         # retirement
+    steps_advanced: int = 0       # engine steps that fed >=1 token of
+                                  # this request (excludes queue waits
+                                  # and post-preemption waiting)
 
     # per-request sampling (None -> server defaults)
     temperature: Optional[float] = None
@@ -44,5 +56,20 @@ class Request:
     def in_prefill(self) -> bool:
         return self.pos < len(self.prompt)
 
+    @property
+    def catching_up(self) -> bool:
+        """More than one known-but-unfed token: initial prefill, or a
+        post-preemption replay. These rows are chunkable — feeding
+        several of their tokens in one step changes no output."""
+        return len(self.tokens) - self.pos > 1
+
     def total_len(self) -> int:
         return len(self.prompt) + self.max_new
+
+    def wait_steps(self) -> int:
+        """Server steps this request spent pending without advancing
+        (queued behind prefill, deferred admission, preempted). Only
+        meaningful after retirement."""
+        if self.finish_step < 0 or self.submit_step < 0:
+            return 0
+        return (self.finish_step - self.submit_step) - self.steps_advanced

@@ -66,6 +66,28 @@ def test_aged_lfu_lets_stale_popular_keys_go():
     assert p.choose_victim() == "hot"
 
 
+def test_aged_lfu_remove_clears_its_own_score_state():
+    """Regression: AgedLFU scores from its own ``_ffreq`` dict, but the
+    inherited ``LFU.remove`` only cleared ``_freq``/``_last`` — so with
+    ``persistent_counts=False`` the aged scores survived eviction (a
+    re-inserted key resumed its old count instead of starting fresh)
+    and the dict grew without bound."""
+    p = AgedLFU(1, persistent_counts=False)
+    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.remove("a")
+    assert "a" not in p._ffreq and "a" not in p._last
+    p.on_insert("a")
+    assert p._ffreq["a"] == 1.0           # fresh start, not resumed at 3
+
+
+def test_aged_lfu_persistent_counts_still_survive_eviction():
+    # default semantics unchanged: popularity is workload-level
+    p = AgedLFU(1)
+    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.remove("a")
+    assert p._ffreq["a"] == 3.0
+
+
 def test_exclude_pins_keys():
     for name in POLICIES:
         p = make_policy(name, 2)
@@ -125,6 +147,20 @@ def test_hits_only_when_cached(trace, cap, name):
             p.on_insert(key)
             shadow.add(key)
         p.tick()
+
+
+@settings(max_examples=60, deadline=None)
+@given(trace=traces, cap=caps)
+def test_aged_lfu_transient_state_bounded_by_residency(trace, cap):
+    """With persistent_counts=False ALL score state must track the
+    resident set — the eviction-state leak kept ``_ffreq`` entries for
+    every key ever seen."""
+    p = AgedLFU(cap, persistent_counts=False)
+    run_trace(p, trace)
+    resident = set(p.keys())
+    assert set(p._ffreq) <= resident
+    assert set(p._last) <= resident
+    assert len(p._ffreq) <= cap
 
 
 @settings(max_examples=40, deadline=None)

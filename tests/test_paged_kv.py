@@ -243,6 +243,17 @@ def test_kv_residency_is_priced(mixtral_setup):
     assert cost.peak_memory_bytes(4.0, kv_tokens=64) > base
     assert cost.kv_tokens_per_expert_slot() > 0
     assert srv.result(rid)  # and the run actually served something
+    # regression: the server's peak_memory_bytes must THREAD the pool's
+    # peak occupancy through kv_tokens (it used to report the engine's
+    # kv-free default, understating serving-mode peak memory)
+    kv_peak_tokens = srv.paged.peak_used * srv.kv_block_size
+    assert s["peak_memory_bytes"] == cost.peak_memory_bytes(
+        cfg.num_experts - 4, kv_tokens=kv_peak_tokens)
+    eng_default = srv.engine.stats()["peak_memory_bytes"]
+    assert s["peak_memory_bytes"] > eng_default
+    # ... and the kv term it adds is exactly the priced pool residency
+    assert s["peak_memory_bytes"] - eng_default == pytest.approx(
+        s["kv_bytes_peak"], rel=1e-6, abs=2)
 
 
 def test_paged_pool_grows_idle(mixtral_setup):

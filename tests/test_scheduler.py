@@ -1,0 +1,291 @@
+"""Scheduler + chunked-prefill invariants, and the Markov-skew fix.
+
+The load-bearing property throughout: scheduling and chunking reorder
+WHEN tokens are computed, never WHAT is computed — every per-request
+output must be byte-identical to the solo ``OffloadEngine.generate``
+path at temperature 0, under every scheduler, chunk size, and
+preemption pattern.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import OffloadEngine
+from repro.core.prefetch import MarkovPredictor
+from repro.models import transformer as tf
+from repro.serving.offload_serving import ContinuousOffloadServer
+from repro.serving.scheduler import (SCHEDULERS, SjfScheduler, make_scheduler,
+                                     remaining_tokens)
+from repro.serving.request import Request
+
+
+@pytest.fixture(scope="module")
+def mixtral_setup():
+    cfg = reduced(get_config("mixtral-8x7b"), layers=3, d_model=96, experts=8)
+    cfg = dataclasses.replace(cfg, dtype="float32", num_experts_per_tok=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+PROMPTS = [[1, 2, 3, 4, 5], [9, 8, 7], [3, 1, 4, 1, 5, 9]]
+
+
+def _refs(params, cfg, prompts, n_new, **kw):
+    out = []
+    for p in prompts:
+        eng = OffloadEngine(params, cfg, cache_slots=4, policy="lru", **kw)
+        out.append(eng.generate(p, n_new))
+    return out
+
+
+# ------------------------------------------------- pure scheduler units
+def test_scheduler_orderings_are_deterministic_and_complete():
+    reqs = [Request(prompt=[1] * n, max_new=m, rid=i, priority=pr,
+                    tenant=t)
+            for i, (n, m, pr, t) in enumerate(
+                [(5, 10, 0, "a"), (2, 3, 1, "b"), (9, 1, 1, "a")])]
+    for name in SCHEDULERS:
+        s = make_scheduler(name)
+        order = s.admission_order(reqs)
+        assert sorted(r.rid for r in order) == [0, 1, 2], name
+        assert [r.rid for r in s.admission_order(reqs)] == \
+            [r.rid for r in order], name  # stable across calls
+
+
+def test_sjf_orders_by_remaining_work_and_tracks_progress():
+    a = Request(prompt=[1] * 10, max_new=10, rid=0)
+    b = Request(prompt=[1, 2], max_new=3, rid=1)
+    s = SjfScheduler()
+    assert [r.rid for r in s.admission_order([a, b])] == [1, 0]
+    assert s.choose_victim([a, b]) is a
+    assert remaining_tokens(b) == 5
+    b.pos = 2
+    b.out = [7, 7]  # 2 sampled -> 2 unfed-no-more, 1 left to sample
+    assert remaining_tokens(b) == 3  # 2 unfed sampled tokens + 1 unsampled
+
+
+def test_priority_beats_arrival_order():
+    lo = Request(prompt=[1], max_new=1, rid=0, priority=0)
+    hi = Request(prompt=[1] * 8, max_new=8, rid=1, priority=5)
+    s = make_scheduler("priority")
+    assert [r.rid for r in s.admission_order([lo, hi])] == [1, 0]
+    assert s.choose_victim([lo, hi]) is lo
+
+
+# ------------------------------------- bit-exactness under every config
+def test_batch1_fifo_chunked_prefill_matches_generate(mixtral_setup):
+    """The tentpole invariant: chunked prefill (virtual rows) is
+    bit-exact with the one-token-per-step path — batch-of-1 fifo with
+    prefill_chunk > 1 reproduces generate() token for token."""
+    cfg, params = mixtral_setup
+    eng = OffloadEngine(params, cfg, cache_slots=4, policy="lru")
+    ref = eng.generate(PROMPTS[0], 8)
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, policy="lru",
+                                  max_batch=1, cache_len=32, kv_block_size=4,
+                                  prefill_chunk=4)
+    rid = srv.submit(PROMPTS[0], max_new=8)
+    srv.run()
+    assert srv.result(rid) == ref
+    # the chunk really amortized steps: prompt fed in ceil(5/4)=2 steps
+    assert srv.step_count < len(PROMPTS[0]) + 8
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULERS))
+@pytest.mark.parametrize("chunk", [1, 3])
+def test_outputs_identical_under_every_scheduler_and_chunk(
+        mixtral_setup, sched, chunk):
+    cfg, params = mixtral_setup
+    refs = _refs(params, cfg, PROMPTS, 6)
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, policy="lru",
+                                  max_batch=2, cache_len=32, kv_block_size=4,
+                                  scheduler=sched, prefill_chunk=chunk)
+    rids = [srv.submit(p, max_new=6, priority=i, tenant=f"t{i % 2}")
+            for i, p in enumerate(PROMPTS)]
+    out = srv.run()
+    for rid, ref in zip(rids, refs):
+        assert out[rid] == ref, (sched, chunk)
+    assert not srv.partial_rids
+
+
+@pytest.mark.parametrize("sched", sorted(SCHEDULERS))
+def test_preemption_replay_never_changes_text(mixtral_setup, sched):
+    """Overcommitted pool: whoever the scheduler evicts, the replayed
+    (chunked) prefill reproduces the solo greedy tokens."""
+    cfg, params = mixtral_setup
+    p0, p1 = [1, 2, 3, 4], [9, 8, 7, 6]
+    refs = _refs(params, cfg, [p0, p1], 12)
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, max_batch=2,
+                                  cache_len=12, kv_block_size=8,
+                                  scheduler=sched, prefill_chunk=4)
+    r0 = srv.submit(p0, max_new=12)
+    r1 = srv.submit(p1, max_new=12)
+    out = srv.run()
+    assert out[r0] == refs[0] and out[r1] == refs[1], sched
+    assert srv.kv_preemptions >= 1, sched  # the pool really overcommitted
+
+
+# ----------------------------------------------------- latency ordering
+def test_sjf_reduces_mean_completion_vs_fifo(mixtral_setup):
+    """One long job ahead of three short ones: sjf lets the shorts
+    overtake in the queue, cutting mean steps-to-completion, without
+    changing any output."""
+    cfg, params = mixtral_setup
+    prompts = [[5, 6, 7, 8, 1, 2, 3, 4, 5, 6, 7, 8], [1, 2], [3, 4], [9, 8]]
+    new = [12, 2, 2, 2]
+    refs = [_refs(params, cfg, [p], n)[0] for p, n in zip(prompts, new)]
+    mean = {}
+    for sched in ("fifo", "sjf"):
+        srv = ContinuousOffloadServer(params, cfg, cache_slots=4,
+                                      max_batch=2, cache_len=32,
+                                      kv_block_size=4, scheduler=sched,
+                                      prefill_chunk=4)
+        rids = [srv.submit(p, max_new=n) for p, n in zip(prompts, new)]
+        out = srv.run()
+        for rid, ref in zip(rids, refs):
+            assert out[rid] == ref, sched
+        fin = [srv.finished[r] for r in rids]
+        mean[sched] = float(np.mean([r.finish_step - r.submit_step
+                                     for r in fin]))
+    assert mean["sjf"] < mean["fifo"], mean
+
+
+def test_chunked_prefill_bounds_decode_wait(mixtral_setup):
+    """A decode-age request co-scheduled with long prompts stalls for
+    fewer steps when prompts catch up in chunks (the per-step budget
+    guarantees it one token per step while prefill is amortized)."""
+    cfg, params = mixtral_setup
+    long_p = [1, 2, 3, 4, 5, 6, 7, 8, 9, 1, 2, 3]
+    waits = {}
+    for chunk in (1, 4):
+        srv = ContinuousOffloadServer(params, cfg, cache_slots=4,
+                                      max_batch=2, cache_len=32,
+                                      kv_block_size=4, prefill_chunk=chunk)
+        rids = [srv.submit(long_p, max_new=2), srv.submit(long_p, max_new=2),
+                srv.submit([7, 7], max_new=2)]
+        srv.run()
+        waits[chunk] = srv.finished[rids[-1]].wait_steps()
+    assert waits[4] < waits[1], waits
+
+
+# ------------------------------------------------- fairness accounting
+def test_tenant_service_matches_trace_slices(mixtral_setup):
+    """The priority scheduler's fairness signal (``tenant_service``)
+    must equal the per-request trace slices summed per tenant."""
+    cfg, params = mixtral_setup
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, max_batch=2,
+                                  cache_len=32, kv_block_size=4,
+                                  scheduler="priority", prefill_chunk=3)
+    tenants = ["a", "a", "b"]
+    rids = [srv.submit(p, max_new=5, tenant=t)
+            for p, t in zip(PROMPTS, tenants)]
+    srv.run()
+    want = {}
+    for rid, t in zip(rids, tenants):
+        want[t] = want.get(t, 0) + srv.trace.request_stats(rid)["tokens"]
+    assert srv.tenant_service == want
+
+
+# ----------------------------------------------- truncated-run recovery
+def test_truncated_run_returns_flagged_partials_and_resumes(mixtral_setup):
+    """run(max_steps=...) used to silently drop in-flight and queued
+    requests from its return value; now it returns their partial token
+    sequences (flagged in ``partial_rids``) and a later run() resumes
+    to exactly the untruncated output."""
+    cfg, params = mixtral_setup
+    full = ContinuousOffloadServer(params, cfg, cache_slots=4, max_batch=2,
+                                   cache_len=32, kv_block_size=4)
+    rids = [full.submit(p, max_new=6) for p in PROMPTS]
+    want = full.run()
+
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, max_batch=2,
+                                  cache_len=32, kv_block_size=4)
+    rids2 = [srv.submit(p, max_new=6) for p in PROMPTS]
+    part = srv.run(max_steps=4)
+    assert set(part) == set(rids2)            # nobody dropped
+    assert srv.partial_rids                   # and the cut is flagged
+    for rid in srv.partial_rids:
+        assert part[rid] == want[rids[rids2.index(rid)]][:len(part[rid])]
+    resumed = srv.run()                       # picks up where it stopped
+    assert not srv.partial_rids
+    for ra, rb in zip(rids, rids2):
+        assert resumed[rb] == want[ra]
+
+
+# ------------------------------------------------- Markov skew (fixed)
+def _synthetic_routes(layers, toks):
+    """Per-token per-layer activation sets with a deterministic
+    same-token l->l+1 transition but alternating routing between
+    consecutive tokens (even tokens use experts 0-3, odd 4-7)."""
+    plan = []
+    for t in range(toks):
+        base = 0 if t % 2 == 0 else 4
+        plan.append([(base + (2 * l) % 4, base + (2 * l + 1) % 4)
+                     for l in range(layers)])
+    return plan
+
+
+def test_markov_predict_from_current_token_beats_skewed_feed():
+    """The predictor's table maps SAME-token layer-l sets to layer-l+1
+    sets; feeding predict() the PREVIOUS token's layer-l set (the old
+    engine wiring) answers for the wrong token whenever consecutive
+    tokens route differently. On an alternating trace the aligned feed
+    is perfect after warmup and the skewed feed is ~0."""
+    L, E, K = 3, 8, 2
+    plan = _synthetic_routes(L, 40)
+
+    def run(skewed):
+        mk = MarkovPredictor(L, E, K)
+        tp = fn = 0
+        prev = None
+        for t, acts in enumerate(plan):
+            for l in range(L - 1):
+                src = (prev[l] if prev else None) if skewed else acts[l]
+                if t >= 2 and src is not None:    # warmup: both chains seen
+                    guess = set(mk.predict(l, src))
+                    truth = set(acts[l + 1])
+                    tp += len(guess & truth)
+                    fn += len(truth - guess)
+                mk.update(l, acts[l], acts[l + 1])
+            prev = acts
+        return tp / (tp + fn)
+
+    assert run(skewed=False) == 1.0
+    assert run(skewed=True) < 0.2
+    assert run(skewed=False) > run(skewed=True)
+
+
+def test_markov_engine_recall_high_on_alternating_routes(mixtral_setup):
+    """Engine-level regression for the same fix: force alternating
+    routing through a patched router and check the recorded prefetch
+    guesses track the CURRENT token (recall ~1 after warmup). Under
+    the pre-fix wiring every guess chased the previous token's chain
+    and recall was ~0 on this trace."""
+    cfg, params = mixtral_setup
+    eng = OffloadEngine(params, cfg, cache_slots=8, policy="lru",
+                        prefetch="markov")
+    plan = _synthetic_routes(cfg.num_layers, 24)
+    calls = {"n": 0}
+
+    def routed(p_l, x):
+        t, l = divmod(calls["n"], cfg.num_layers)
+        calls["n"] += 1
+        ids = np.asarray([list(plan[t][l])], np.int64)
+        return ids, np.full_like(ids, 0.5, np.float32)
+
+    eng._route = routed
+    st = eng.init_state(1, len(plan))
+    for t in range(len(plan)):
+        eng.decode_token(st, jnp.asarray([[1]], jnp.int32), t, t)
+    # score guesses vs activations, skipping the 2-token warmup
+    tp = fn = 0
+    for s in eng.trace.steps:
+        if s.layer == 0 or not s.spec_guess or s.token_idx < 2:
+            continue
+        g, a = set(s.spec_guess), set(s.activated)
+        tp += len(g & a)
+        fn += len(a - g)
+    assert tp / (tp + fn) == 1.0
