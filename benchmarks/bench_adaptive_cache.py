@@ -43,11 +43,14 @@ def run() -> None:
     L, E, k = cfg.num_layers, cfg.num_experts, cfg.num_experts_per_tok
     budget = 4 * L  # same total as uniform cache=4
 
-    # 1. calibration trace (full-resident so we see pure activations)
+    # 1. calibration trace (full-resident so we see pure activations);
+    #    the same trace trains the learned policy's reuse model offline
     prof = OffloadEngine(params, cfg, cache_slots=E, policy="lru")
     prof.generate(eval_prompts()[0], 24)
     ents = np.asarray([prof.trace.activation_entropy(l, E) for l in range(L)])
     slots = allocate(ents, budget, k, E)
+    from repro.core.learned import train_from_trace
+    model = train_from_trace(prof.trace, E)
     print(f"# per-layer entropy: {[round(e, 2) for e in ents]}")
     print(f"# adaptive slots (budget {budget}): {slots} vs uniform "
           f"{[4] * L}")
@@ -55,9 +58,11 @@ def run() -> None:
     # 2/3. evaluation on held-out prompts, same budget
     print("policy,allocation,hit_rate,precision,recall")
     results = {}
-    for policy in ("lru", "lfu"):
+    for policy in ("lru", "lfu", "learned"):
         for name, alloc in [("uniform", [4] * L), ("adaptive", slots)]:
-            eng = OffloadEngine(params, cfg, cache_slots=alloc, policy=policy)
+            kw = {"learned_model": model} if policy == "learned" else {}
+            eng = OffloadEngine(params, cfg, cache_slots=alloc,
+                                policy=policy, **kw)
             for p in eval_prompts(n=4, seed=31):
                 eng.generate(p, 24)
             s = eng.stats()
@@ -76,11 +81,11 @@ def run() -> None:
     from benchmarks.common import replay_policy
     from repro.data import workload_from_paper_stats
 
-    def replay_nonuniform(wl, policy, slots_per_layer):
+    def replay_nonuniform(wl, policy, slots_per_layer, **kw):
         h = m = 0
         for l in range(wl.num_layers):
             sub = type(wl)(1, wl.num_experts, wl.top_k, [wl.acts[l]])
-            r = replay_policy(sub, policy, slots_per_layer[l])
+            r = replay_policy(sub, policy, slots_per_layer[l], **kw)
             h += r["hits"]
             m += r["misses"]
         return h / (h + m)
@@ -102,11 +107,22 @@ def run() -> None:
     ])
     budget2 = 4 * L2
     slots_h = allocate(ents, budget2, 2, 8)
+    # learned model for the hetero replay: trained on a same-dynamics
+    # workload with fresh seeds (generalization, not memorization)
+    from repro.core.learned import synthetic_trace, train_from_trace
+    wls_tr = [workload_from_paper_stats(num_layers=1, num_experts=8,
+                                        top_k=2, n_tokens=512,
+                                        zipf_s=(2.0 if l % 2 == 0 else 0.1),
+                                        locality=0.05, seed=900 + l)
+              for l in range(L2)]
+    model_h = train_from_trace(
+        synthetic_trace([w.acts[0] for w in wls_tr]), 8)
     print(f"\n# heterogeneous workload (alternating zipf 2.0 / 0.1): "
           f"adaptive slots {slots_h}")
-    for policy in ("lru", "lfu"):
-        uni = replay_nonuniform(wl_h, policy, [4] * L2)
-        ada = replay_nonuniform(wl_h, policy, slots_h)
+    for policy in ("lru", "lfu", "aged-lfu", "learned"):
+        kw = {"model": model_h} if policy == "learned" else {}
+        uni = replay_nonuniform(wl_h, policy, [4] * L2, **kw)
+        ada = replay_nonuniform(wl_h, policy, slots_h, **kw)
         print(f"{policy}: uniform={uni:.4f} adaptive={ada:.4f} "
               f"({ada - uni:+.4f})")
         emit(f"adaptive/hetero-{policy}", 0.0,

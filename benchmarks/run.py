@@ -21,12 +21,13 @@ def suite():
                             bench_expert_distribution, bench_kernels,
                             bench_offload_sweep, bench_roofline,
                             bench_serving_offload, bench_speculative,
-                            bench_traces)
+                            bench_traces, train_predictor)
 
     return [
         ("table1_offload_sweep", bench_offload_sweep.run),
         ("serving_offload_batched", bench_serving_offload.run),
         ("table2_cache_policies", bench_cache_policies.run),
+        ("learned_predictor", train_predictor.run),
         ("fig13_14_speculative", bench_speculative.run),
         ("fig7_expert_distribution", bench_expert_distribution.run),
         ("fig1_6_8_12_traces", bench_traces.run),

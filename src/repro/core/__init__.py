@@ -1,14 +1,19 @@
-from repro.core.cache_policies import POLICIES, make_policy
+from repro.core.cache_policies import POLICIES, LearnedPolicy, make_policy
 from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
 from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
+from repro.core.learned import (LearnedModel, evaluate_recall,
+                                train_from_trace)
 from repro.core.offload_engine import OffloadEngine
 from repro.core.paged_kv import PagedKVCache
-from repro.core.prefetch import MarkovPredictor, SpeculativePrefetcher
+from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
+                                 SpeculativePrefetcher)
 from repro.core.trace import StepTrace, TraceRecorder
 
 __all__ = [
     "POLICIES", "make_policy", "CostModel", "HardwareProfile", "ModelBytes",
-    "ExpertCache", "ExpertStore", "OffloadEngine", "MarkovPredictor",
+    "ExpertCache", "ExpertStore", "LearnedModel", "LearnedPolicy",
+    "LearnedPredictor", "OffloadEngine", "MarkovPredictor",
     "PagedKVCache", "SpeculativePrefetcher", "StepTrace", "TraceRecorder",
+    "evaluate_recall", "train_from_trace",
 ]

@@ -24,7 +24,8 @@ from repro.core.cache_policies import CachePolicy, make_policy
 from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
 from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
-from repro.core.prefetch import MarkovPredictor, SpeculativePrefetcher
+from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
+                                 SpeculativePrefetcher)
 from repro.core.trace import TraceRecorder
 from repro.models import transformer as tf
 from repro.models.layers import rms_norm, sinusoidal_positions
@@ -47,15 +48,17 @@ class OffloadEngine:
     def __init__(self, params, cfg, *,
                  cache_slots,  # int, or per-layer Sequence[int]
                  policy: str = "lru",
+                 policy_kw: Optional[dict] = None,
                  policy_factory: Optional[Callable[[int], CachePolicy]] = None,
                  quant: str = "none",
-                 prefetch: Optional[str] = None,   # None | "spec" | "markov"
+                 prefetch: Optional[str] = None,  # None|"spec"|"markov"|"learned"
+                 learned_model=None,   # repro.core.learned.LearnedModel
                  hw: Optional[HardwareProfile] = None,
                  overlap: bool = False,
                  trace: Optional[TraceRecorder] = None,
                  seed: int = 0):
         assert cfg.is_moe, "offloading targets MoE experts"
-        assert prefetch in (None, "spec", "markov")
+        assert prefetch in (None, "spec", "markov", "learned")
         self.params = params
         self.cfg = cfg
         if isinstance(cache_slots, int):
@@ -72,10 +75,13 @@ class OffloadEngine:
 
         d, ff = cfg.d_model, cfg.expert_d_ff
         shapes = {"w1": (d, ff), "w3": (d, ff), "w2": (ff, d)}
+        pkw = dict(policy_kw or {})
+        if policy == "learned" and learned_model is not None:
+            pkw.setdefault("model", learned_model)
         self.caches: List[ExpertCache] = []
         for l in range(cfg.num_layers):
             pol = (policy_factory(l) if policy_factory is not None
-                   else make_policy(policy, self.slots[l]))
+                   else make_policy(policy, self.slots[l], **pkw))
             self.caches.append(ExpertCache(l, self.slots[l], pol,
                                            self.store, shapes))
 
@@ -91,6 +97,10 @@ class OffloadEngine:
         self.markov = (MarkovPredictor(cfg.num_layers, cfg.num_experts,
                                        cfg.num_experts_per_tok)
                        if prefetch == "markov" else None)
+        self.learned = (LearnedPredictor(cfg.num_layers, cfg.num_experts,
+                                         cfg.num_experts_per_tok,
+                                         model=learned_model)
+                        if prefetch == "learned" else None)
         self._prompt_id = 0
         self._rng = np.random.default_rng(seed)
         self._prev_acts: Dict[int, Tuple[int, ...]] = {}
@@ -218,7 +228,7 @@ class OffloadEngine:
             hits=tuple(hits), misses=tuple(misses), evicted=tuple(evicted),
             spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved),
             request_ids=req_ids, request_token_idx=req_tok,
-            request_activated=req_act)
+            request_activated=req_act, engine_step=self._steps_done)
         return h, acts, len(misses)
 
     # ------------------------------------------------------------------
@@ -303,10 +313,14 @@ class OffloadEngine:
             h, acts, misses = self._moe_offloaded(
                 p_l, l, h, pg, pm, prompt_ids, token_indices, active)
             step_misses += misses
-            if self.markov is not None:
+            predictor = self.markov if self.markov is not None else self.learned
+            if predictor is not None:
+                if self.learned is not None:
+                    # keep the learned feature walk aligned with training
+                    self.learned.observe(l, acts)
                 if l > 0:
-                    self.markov.update(l - 1, self._prev_acts.get(l - 1, ()),
-                                       acts)
+                    predictor.update(l - 1, self._prev_acts.get(l - 1, ()),
+                                     acts)
                 if l + 1 < cfg.num_layers:
                     # predict l+1 from THIS token's layer-l set — the
                     # same-token l -> l+1 transition the table is
@@ -315,7 +329,7 @@ class OffloadEngine:
                     # set: train/predict skew that wasted the learned
                     # transitions whenever consecutive tokens routed
                     # differently — regression-tested.)
-                    guess = self.markov.predict(l, acts)
+                    guess = predictor.predict(l, acts)
                     moved = self.caches[l + 1].prefetch(guess)
                     step_prefetch += len(moved)
                     pending[l + 1] = (guess, tuple(moved))

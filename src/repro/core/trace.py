@@ -35,6 +35,11 @@ class StepTrace:
     evicted: Tuple[int, ...]
     spec_guess: Tuple[int, ...] = ()        # speculative guesses for THIS layer
     prefetched: Tuple[int, ...] = ()        # experts actually pre-admitted
+    # global engine step (one per decode_tokens call): aligns the layers
+    # of one token pass so the learned predictor's same-token
+    # previous-layer transition feature survives batched/interleaved
+    # traces, where token_idx alone is ambiguous (-1 sentinel)
+    engine_step: int = -1
     # --- batched serving attribution (one entry per active request) ---
     # ``activated``/``hits``/``misses`` above describe the BATCH-UNION
     # access against the shared cache; these slice it back per request.
@@ -231,7 +236,13 @@ class TraceRecorder:
         def detuple(v):
             return tuple(detuple(x) for x in v) if isinstance(v, list) else v
 
+        # restrict to known fields so traces serialized by NEWER versions
+        # (extra per-step fields) still load, and let dataclass defaults
+        # fill fields OLDER traces predate (e.g. ``engine_step``) — the
+        # roundtrip contract the learned-predictor trainer relies on
+        known = {f.name for f in dataclasses.fields(StepTrace)}
         tr = cls()
         for d in json.loads(s):
-            tr.steps.append(StepTrace(**{k: detuple(v) for k, v in d.items()}))
+            tr.steps.append(StepTrace(**{k: detuple(v) for k, v in d.items()
+                                         if k in known}))
         return tr

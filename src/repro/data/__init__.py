@@ -1,9 +1,10 @@
 from repro.data.pipeline import (
     ExpertWorkload,
+    drifting_workload,
     lm_batches,
     markov_lm,
     workload_from_paper_stats,
 )
 
-__all__ = ["ExpertWorkload", "lm_batches", "markov_lm",
+__all__ = ["ExpertWorkload", "drifting_workload", "lm_batches", "markov_lm",
            "workload_from_paper_stats"]

@@ -130,3 +130,23 @@ def workload_from_paper_stats(*, num_layers: int = 32, num_experts: int = 8,
             prev = ids_t
         acts.append(seq)
     return ExpertWorkload(num_layers, num_experts, top_k, acts)
+
+
+def drifting_workload(*, num_layers: int = 4, num_experts: int = 8,
+                      top_k: int = 2, n_tokens: int = 256, phases: int = 2,
+                      zipf_s: float = 1.0, locality: float = 0.2,
+                      seed: int = 0) -> ExpertWorkload:
+    """Piecewise-stationary workload: ``phases`` back-to-back segments
+    of ``workload_from_paper_stats``, each with an independently drawn
+    (same-skew) popularity ordering — the request-mix shift a serving
+    cache sees when the prompt distribution moves. Popularity-only
+    policies (persistent LFU) cling to the stale ordering after a
+    phase switch; recency-only ones (LRU) never exploit the skew — the
+    regime where learned replacement shows its value."""
+    segs = [workload_from_paper_stats(
+        num_layers=num_layers, num_experts=num_experts, top_k=top_k,
+        n_tokens=n_tokens, zipf_s=zipf_s, locality=locality,
+        seed=seed + 7919 * i) for i in range(phases)]
+    acts = [[ids for s in segs for ids in s.acts[l]]
+            for l in range(num_layers)]
+    return ExpertWorkload(num_layers, num_experts, top_k, acts)

@@ -22,7 +22,8 @@ def main():
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--mode", choices=["offload", "device"], default="offload")
     ap.add_argument("--policy", default="lru")
-    ap.add_argument("--prefetch", default=None, choices=[None, "spec", "markov"])
+    ap.add_argument("--prefetch", default=None,
+                    choices=[None, "spec", "markov", "learned"])
     ap.add_argument("--cache-slots", type=int, default=4)
     ap.add_argument("--quant", default="none", choices=["none", "int8"])
     ap.add_argument("--overlap", action="store_true")

@@ -30,7 +30,8 @@ def run_trace(policy, accesses):
 # ----------------------------------------------------------- unit tests
 def test_lru_evicts_least_recent():
     p = LRU(2)
-    p.on_insert("a"); p.on_insert("b")
+    p.on_insert("a")
+    p.on_insert("b")
     p.on_access("a")                      # b is now LRU
     assert p.choose_victim() == "b"
 
@@ -47,7 +48,9 @@ def test_lfu_evicts_least_frequent():
 def test_lfu_counts_persist_across_eviction():
     # the paper's LFU: popularity is workload-level, not cache-level
     p = LFU(1)
-    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.on_insert("a")
+    p.on_access("a")
+    p.on_access("a")
     p.remove("a")
     p.on_insert("b")
     assert p._freq["a"] == 3
@@ -58,11 +61,13 @@ def test_aged_lfu_lets_stale_popular_keys_go():
     p = AgedLFU(2, decay=0.5, age_every=1)
     p.on_insert("hot")
     for _ in range(10):
-        p.on_access("hot"); p.tick()
+        p.on_access("hot")
+        p.tick()
     p.on_insert("new")
     for _ in range(8):
         p.tick()                          # hot's count decays to ~0.01
-    p.on_access("new"); p.tick()
+    p.on_access("new")
+    p.tick()
     assert p.choose_victim() == "hot"
 
 
@@ -73,7 +78,9 @@ def test_aged_lfu_remove_clears_its_own_score_state():
     re-inserted key resumed its old count instead of starting fresh)
     and the dict grew without bound."""
     p = AgedLFU(1, persistent_counts=False)
-    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.on_insert("a")
+    p.on_access("a")
+    p.on_access("a")
     p.remove("a")
     assert "a" not in p._ffreq and "a" not in p._last
     p.on_insert("a")
@@ -83,7 +90,9 @@ def test_aged_lfu_remove_clears_its_own_score_state():
 def test_aged_lfu_persistent_counts_still_survive_eviction():
     # default semantics unchanged: popularity is workload-level
     p = AgedLFU(1)
-    p.on_insert("a"); p.on_access("a"); p.on_access("a")
+    p.on_insert("a")
+    p.on_access("a")
+    p.on_access("a")
     p.remove("a")
     assert p._ffreq["a"] == 3.0
 
@@ -91,7 +100,8 @@ def test_aged_lfu_persistent_counts_still_survive_eviction():
 def test_exclude_pins_keys():
     for name in POLICIES:
         p = make_policy(name, 2)
-        p.on_insert(1); p.on_insert(2)
+        p.on_insert(1)
+        p.on_insert(2)
         v = p.choose_victim(frozenset([1]))
         assert v == 2, name
         with pytest.raises(RuntimeError):
@@ -101,7 +111,8 @@ def test_exclude_pins_keys():
 def test_belady_picks_farthest_future():
     fut = ["a", "b", "a", "c", "b", "a"]
     p = Belady(2, fut)
-    p.on_insert("a"); p.on_insert("b")
+    p.on_insert("a")
+    p.on_insert("b")
     p.advance(2)                          # cursor at index 2
     # next use: a@2, b@4 -> evict b
     assert p.choose_victim() == "b"
@@ -109,7 +120,8 @@ def test_belady_picks_farthest_future():
 
 def test_belady_key_never_used_again():
     p = Belady(2, ["a", "b", "a", "a"])
-    p.on_insert("a"); p.on_insert("b")
+    p.on_insert("a")
+    p.on_insert("b")
     p.advance(2)
     assert p.choose_victim() == "b"       # b never used again
 

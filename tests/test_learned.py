@@ -1,0 +1,313 @@
+"""Learned expert-activation predictor + LearnedPolicy (paper §6.1's
+"learning-based prediction" direction; FlashMoE / MoE-Beyond)."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import OffloadEngine, make_policy
+from repro.core.cache_policies import POLICIES, AgedLFU, LearnedPolicy
+from repro.core.learned import (DECAYS, GAMMA, N_FEATURES, LayerState,
+                                LearnedModel, evaluate_recall,
+                                extract_dataset, synthetic_trace,
+                                train_from_trace)
+from repro.core.prefetch import LearnedPredictor
+from repro.core.trace import TraceRecorder
+from repro.data import drifting_workload
+from repro.models import transformer as tf
+
+
+def drift_trace(seed: int, *, layers=2, experts=8, k=2, tokens=64):
+    wl = drifting_workload(num_layers=layers, num_experts=experts, top_k=k,
+                           n_tokens=tokens, seed=seed)
+    return synthetic_trace(wl.acts), wl
+
+
+def replay(wl, policy_name: str, cache: int, **kw):
+    """Minimal per-layer policy replay (mirrors benchmarks.common)."""
+    hits = total = 0
+    pols = [make_policy(policy_name, cache, **kw)
+            for _ in range(wl.num_layers)]
+    for t in range(len(wl.acts[0])):
+        for l, p in enumerate(pols):
+            for e in wl.acts[l][t]:
+                total += 1
+                if p.contains(e):
+                    hits += 1
+                    p.on_access(e)
+                else:
+                    if p.full:
+                        p.remove(p.choose_victim())
+                    p.on_insert(e)
+            p.tick()
+    return hits / total
+
+
+# ------------------------------------------------------------ training
+def test_training_bitwise_deterministic():
+    tr, _ = drift_trace(3)
+    m1 = train_from_trace(tr, 8)
+    m2 = train_from_trace(tr, 8)
+    assert (m1.w == m2.w).all()
+    assert (m1.mean == m2.mean).all()
+    assert (m1.std == m2.std).all()
+    assert m1.confidence == m2.confidence
+    assert np.isfinite(m1.w).all()
+
+
+def test_extract_dataset_shape_and_cold_features():
+    tr, wl = drift_trace(5, layers=1, tokens=16)
+    X, y = extract_dataset(tr, 8)
+    n_steps = len(tr.steps)
+    assert X.shape == (n_steps * 8, N_FEATURES)
+    assert y.shape == (n_steps * 8,)
+    # first step: no history — bias 1, traces/freq/recency 0, NaN trans
+    first = X[:8]
+    assert (first[:, 0] == 1.0).all()
+    assert (first[:, 1:6] == 0.0).all()
+    assert np.isnan(first[:, 6]).all()
+    # labels are the k activated experts per step
+    assert y[:8].sum() == len(tr.steps[0].activated)
+
+
+def test_npz_roundtrip_exact(tmp_path):
+    tr, _ = drift_trace(7)
+    m = train_from_trace(tr, 8, meta={"arch": "test", "k": 2})
+    p = str(tmp_path / "w.npz")
+    m.save(p)
+    got = LearnedModel.load(p)
+    assert (got.w == m.w).all()
+    assert (got.mean == m.mean).all()
+    assert (got.std == m.std).all()
+    assert got.decays == m.decays
+    assert got.gamma == m.gamma
+    assert got.confidence == m.confidence
+    assert got.meta == m.meta
+    # NaN imputation unaffected by the roundtrip
+    x = [1.0, 0.5, 0.5, 0.5, 0.25, 0.8, float("nan")]
+    assert got.predict(x) == m.predict(x)
+
+
+def test_trace_json_roundtrip_trains_identical_weights():
+    """record -> to_json -> from_json must preserve every field the
+    trainer reads (incl. ``engine_step``) bit-exactly."""
+    tr, _ = drift_trace(11)
+    back = TraceRecorder.from_json(tr.to_json())
+    assert [s.engine_step for s in back.steps] == \
+        [s.engine_step for s in tr.steps]
+    assert back.steps == tr.steps
+    m1, m2 = train_from_trace(tr, 8), train_from_trace(back, 8)
+    assert (m1.w == m2.w).all() and m1.confidence == m2.confidence
+
+
+def test_from_json_tolerates_unknown_fields_and_missing_engine_step():
+    tr = TraceRecorder()
+    tr.record(prompt_id=0, token_idx=0, layer=0, activated=(1, 2),
+              gate_weights=(0.5, 0.5), cache_before=(), cache_after=(1, 2),
+              hits=(), misses=(1, 2), evicted=())
+    s = tr.to_json().replace('"layer": 0', '"layer": 0, "future_field": 9')
+    back = TraceRecorder.from_json(s)
+    assert back.steps[0].engine_step == -1          # default fills in
+    assert back.steps[0].activated == (1, 2)
+
+
+# ------------------------------------------------------ LearnedPolicy
+def _confident_model(conf=0.9):
+    # hand-built model scoring by the fast trace (index 1): higher
+    # recent activity -> higher predicted reuse
+    w = np.zeros(N_FEATURES)
+    w[1] = 4.0
+    return LearnedModel(w, np.zeros(N_FEATURES), np.ones(N_FEATURES),
+                        confidence=conf)
+
+
+def test_learned_registered_and_usable_without_model():
+    assert POLICIES["learned"] is LearnedPolicy
+    p = make_policy("learned", 2)
+    p.on_insert("a")
+    p.on_insert("b")
+    assert p.choose_victim() in ("a", "b")
+
+
+def test_low_confidence_falls_back_to_agedlfu_victim_for_victim():
+    model = _confident_model(conf=0.01)          # below min_confidence
+    rng = np.random.default_rng(0)
+    keys = rng.integers(0, 12, size=400)
+    learned = LearnedPolicy(4, model=model, min_confidence=0.05)
+    ref = AgedLFU(4)
+    for k in keys:
+        k = int(k)
+        vl = vr = None
+        if learned.contains(k):
+            learned.on_access(k)
+        else:
+            if learned.full:
+                vl = learned.choose_victim()
+                learned.remove(vl)
+            learned.on_insert(k)
+        if ref.contains(k):
+            ref.on_access(k)
+        else:
+            if ref.full:
+                vr = ref.choose_victim()
+                ref.remove(vr)
+            ref.on_insert(k)
+        assert vl == vr                         # victim-for-victim equal
+        learned.tick()
+        ref.tick()
+    assert sorted(learned.keys()) == sorted(ref.keys())
+
+
+def test_model_victim_is_least_predicted_reuse():
+    p = LearnedPolicy(3, model=_confident_model())
+    for k, n in [("hot", 6), ("warm", 3), ("cold", 1)]:
+        p.on_insert(k)
+        for _ in range(n - 1):
+            p.on_access(k)
+        p.tick()
+    assert p.choose_victim() == "cold"
+    assert p.choose_victim(exclude=frozenset(["cold"])) == "warm"
+    with pytest.raises(RuntimeError):
+        p.choose_victim(exclude=frozenset(["hot", "warm", "cold"]))
+
+
+def test_persistent_counts_contracts():
+    # persistent (default): popularity survives eviction
+    p = LearnedPolicy(1, model=_confident_model())
+    p.on_insert("a")
+    p.on_access("a")
+    p.remove("a")
+    assert p._cnt["a"] == 2 and "a" in p._traces
+    # non-persistent: ALL per-key state bounded by the resident set
+    q = LearnedPolicy(2, model=_confident_model(), persistent_counts=False)
+    for k in ("a", "b", "c", "d"):
+        if q.full:
+            q.remove(q.choose_victim())
+        q.on_insert(k)
+        q.tick()
+    resident = set(q.keys())
+    assert len(resident) == 2
+    for d in (q._traces, q._trace_t, q._cnt, q._last_act, q._ffreq):
+        assert set(d) <= resident
+
+
+def test_learned_beats_lru_and_lfu_on_drifting_mix():
+    """The committed-baseline claim, in miniature: train on one drift
+    workload, evaluate on another (same dynamics, fresh popularity
+    orderings) — learned must beat recency-only AND popularity-only."""
+    tr, _ = drift_trace(17, layers=4, tokens=128)
+    model = train_from_trace(tr, 8)
+    _, wl_eval = drift_trace(1017, layers=4, tokens=128)
+    h = {pol: replay(wl_eval, pol, 4,
+                     **({"model": model} if pol == "learned" else {}))
+         for pol in ("lru", "lfu", "learned")}
+    assert h["learned"] > h["lru"]
+    assert h["learned"] > h["lfu"]
+
+
+# ---------------------------------------------------------- prediction
+def test_layerstate_matches_extractor_walk():
+    tr, _ = drift_trace(19, layers=1, tokens=24)
+    X, _ = extract_dataset(tr, 8)
+    st = LayerState(8)
+    for i, s in enumerate(tr.steps):
+        np.testing.assert_array_equal(
+            st.features(None)[:, :6], X[i * 8:(i + 1) * 8, :6])
+        st.observe(s.activated)
+
+
+def test_evaluate_recall_model_beats_marginal_on_drift():
+    tr_train, _ = drift_trace(17, layers=4, tokens=128)
+    model = train_from_trace(tr_train, 8)
+    tr_eval, _ = drift_trace(1017, layers=4, tokens=128)
+    rec_m = evaluate_recall(tr_eval, 8, 2, model)
+    rec_b = evaluate_recall(tr_eval, 8, 2, None)
+    assert rec_m > rec_b
+
+
+def test_learned_predictor_uses_transition_signal():
+    # deterministic layer-to-layer coupling: layer1 re-activates
+    # layer0's expert. The predictor must learn to follow it.
+    rng = np.random.default_rng(2)
+    seq = [int(e) for e in rng.integers(0, 6, size=160)]
+    acts = [[(e,) for e in seq], [(e,) for e in seq]]
+    model = train_from_trace(synthetic_trace(acts), 6)
+    pred = LearnedPredictor(2, 6, 1, model)
+    hits = total = 0
+    for t, e in enumerate(seq):
+        pred.observe(0, (e,))
+        if t > 8:
+            guess = pred.predict(0, (e,))
+            hits += int(guess == (e,))
+            total += 1
+        pred.update(0, (e,), (e,))
+        pred.observe(1, (e,))
+    assert hits / total > 0.9
+    # boundary + no-input contracts
+    assert pred.predict(1, (0,)) == ()          # no layer 2
+    assert pred.predict(0, ()) == ()
+
+
+# ------------------------------------------------------- engine wiring
+@pytest.fixture(scope="module")
+def tiny_moe():
+    cfg = reduced(get_config("mixtral-8x7b"), layers=3, d_model=64,
+                  experts=8, vocab=128)
+    cfg = dataclasses.replace(cfg, dtype="float32", num_experts_per_tok=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_learned_policy_and_prefetch_bit_transparent(tiny_moe):
+    cfg, params = tiny_moe
+    prof = OffloadEngine(params, cfg, cache_slots=cfg.num_experts,
+                         policy="lru")
+    prof.generate([1, 2, 3, 4], 8)
+    assert all(s.engine_step >= 0 for s in prof.trace.steps)
+    model = train_from_trace(prof.trace, cfg.num_experts)
+
+    ref = OffloadEngine(params, cfg, cache_slots=4, policy="lru")
+    out_ref = ref.generate([5, 6, 7], 8)
+    for kw in ({"policy": "learned", "learned_model": model},
+               {"policy": "learned"},            # no model: AgedLFU path
+               {"policy": "lru", "prefetch": "learned",
+                "learned_model": model},
+               {"policy": "learned", "prefetch": "learned",
+                "learned_model": model}):
+        eng = OffloadEngine(params, cfg, cache_slots=4, **kw)
+        assert eng.generate([5, 6, 7], 8) == out_ref
+        s = eng.stats()
+        assert 0.0 <= s["hit_rate"] <= 1.0
+
+
+def test_engine_trace_json_roundtrip_trains_identically(tiny_moe):
+    """ISSUE regression: a REAL engine trace (with engine_step) must
+    survive to_json/from_json and train to identical weights."""
+    cfg, params = tiny_moe
+    eng = OffloadEngine(params, cfg, cache_slots=4, policy="lfu")
+    eng.generate([9, 8, 7], 8)
+    back = TraceRecorder.from_json(eng.trace.to_json())
+    m1 = train_from_trace(eng.trace, cfg.num_experts)
+    m2 = train_from_trace(back, cfg.num_experts)
+    assert (m1.w == m2.w).all()
+
+
+def test_server_accepts_learned_policy(tiny_moe):
+    cfg, params = tiny_moe
+    from repro.serving import ContinuousOffloadServer
+    prof = OffloadEngine(params, cfg, cache_slots=cfg.num_experts,
+                         policy="lru")
+    prof.generate([1, 2, 3], 6)
+    model = train_from_trace(prof.trace, cfg.num_experts)
+    outs = []
+    for pol, kw in [("lru", {}), ("learned", {"learned_model": model})]:
+        srv = ContinuousOffloadServer(params, cfg, cache_slots=4,
+                                      policy=pol, max_batch=2, cache_len=32,
+                                      kv_block_size=8, **kw)
+        rids = [srv.submit([2, 3, 4], max_new=4),
+                srv.submit([5, 6], max_new=4)]
+        srv.run()
+        outs.append([tuple(srv.result(r)) for r in rids])
+    assert outs[0] == outs[1]
