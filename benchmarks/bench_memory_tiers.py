@@ -1,0 +1,134 @@
+"""Tiered-memory arbiter sweep: HBM budget x expert/KV split x disk tier.
+
+Three views over ``TieredMemoryManager`` on the trained reduced Mixtral:
+
+1. ``plan_hbm_split`` table — how one HBM byte budget splits between
+   expert-cache slots and KV blocks as ``expert_frac`` sweeps (pure
+   arithmetic, the sizing table docs/memory.md discusses);
+2. the headline overcommit experiment — an overcommitted KV pool served
+   twice, resume-from-host vs replay-as-prefill, comparing
+   steps-to-drain (resume must win: parked KV re-enters at its parked
+   position instead of re-feeding every token);
+3. the disk-tier latency sweep — the same tight-host-budget run under
+   an NVMe vs a SATA-class disk profile (``HardwareProfile.with_disk``),
+   showing demand disk fetches moving the simulated clock.
+
+Writes ``benchmarks/results/BENCH_tiers.json`` (gated against the
+committed ``BENCH_tiers.json`` baseline by ``check_tiers_regression``)
+and emits house-format CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, eval_prompts, \
+    trained_reduced_mixtral
+
+BLOCK = 8  # KV block size (tokens) for every tiered run in this bench
+
+
+def _prices(cfg):
+    from repro.core import ModelBytes
+    eb = 3 * cfg.d_model * cfg.expert_d_ff * 4      # fp32 device slot
+    kvb = BLOCK * ModelBytes.from_config(cfg).kv_bytes_per_token \
+        * cfg.num_layers
+    return eb, kvb
+
+
+def _server(params, cfg, *, slots, blocks, **kw):
+    """Tiered server landing exactly on (slots, blocks) — the budget is
+    built from the same prices ``plan_hbm_split`` uses."""
+    from repro.serving import ContinuousOffloadServer
+    eb, kvb = _prices(cfg)
+    budget = slots * cfg.num_layers * eb + blocks * kvb
+    frac = slots * cfg.num_layers * eb / budget
+    srv = ContinuousOffloadServer(
+        params, cfg, max_batch=2, cache_len=64, policy="lru",
+        kv_block_size=BLOCK, prefill_chunk=4, hbm_budget_bytes=budget,
+        tier_expert_frac=min(frac + 1e-9, 1 - 1e-9), **kw)
+    assert srv.engine.caches[0].n_slots == slots
+    assert srv.paged.num_blocks == blocks
+    return srv
+
+
+def _drain(srv, prompts, max_new=10):
+    for p in prompts:
+        srv.submit(p, max_new=max_new)
+    srv.run()
+    return srv.stats()
+
+
+def run() -> dict:
+    cfg, params = trained_reduced_mixtral()
+    eb, kvb = _prices(cfg)
+    prompts = eval_prompts(n=3, length=6, vocab=cfg.vocab_size)
+    cells: dict = {}
+
+    # -- 1. plan table: one budget, sweep the expert/KV split ----------
+    from repro.core import plan_hbm_split
+    budget = 4 * cfg.num_layers * eb + 16 * kvb
+    for frac in (0.3, 0.5, 0.7):
+        slots, blocks = plan_hbm_split(
+            budget, num_layers=cfg.num_layers, num_experts=cfg.num_experts,
+            expert_bytes=eb, kv_block_bytes=kvb, expert_frac=frac)
+        cells[f"plan/frac={frac}"] = {"slots": slots, "blocks": blocks}
+        emit(f"tiers_plan_frac_{frac}", 0.0,
+             f"slots={slots} blocks={blocks} budget={budget}")
+
+    # -- 2. overcommit: resume-from-host vs replay-as-prefill ----------
+    for mode, name in ((True, "resume"), (False, "replay")):
+        srv = _server(params, cfg, slots=2, blocks=3, resume_from_host=mode)
+        s = _drain(srv, prompts)
+        cells[f"overcommit/{name}"] = {
+            "steps": srv.step_count,
+            "preemptions": int(s["kv_preemptions"]),
+            "kv_parks": int(s.get("tier_kv_parks", 0)),
+            "kv_resumes": int(s.get("tier_kv_resumes", 0)),
+            "sim_time_s": s["sim_time_s"],
+        }
+        emit(f"tiers_overcommit_{name}", s["sim_time_s"] * 1e6,
+             f"steps={srv.step_count} preempt={int(s['kv_preemptions'])}")
+    res = cells["overcommit/resume"]
+    rep = cells["overcommit/replay"]
+    assert res["preemptions"] >= 1, "overcommit cell failed to preempt"
+    cells["overcommit/summary"] = {
+        "resume_beats_replay": res["steps"] < rep["steps"],
+        "steps_saved": rep["steps"] - res["steps"],
+    }
+    emit("tiers_resume_vs_replay", 0.0,
+         f"resume={res['steps']} replay={rep['steps']} "
+         f"saved={rep['steps'] - res['steps']}")
+
+    # -- 3. disk-tier latency sweep (tight host budget) ----------------
+    from repro.core import HardwareProfile
+    host = cfg.num_experts * cfg.num_layers * eb // 2  # half the masters
+    for name, hw in (("nvme", HardwareProfile.a6000_pcie4()),
+                     ("sata", HardwareProfile.a6000_pcie4()
+                      .with_disk(0.5e9, 4e-3))):
+        srv = _server(params, cfg, slots=2, blocks=16,
+                      host_budget_bytes=host, hw=hw)
+        s = _drain(srv, prompts[:1])
+        cells[f"disk/{name}"] = {
+            "sim_time_s": s["sim_time_s"],
+            "stall_s": s["tier_stall_s"],
+            "disk_fetches": int(s["tier_expert_disk_fetches"]),
+        }
+        emit(f"tiers_disk_{name}", s["sim_time_s"] * 1e6,
+             f"stall_us={s['tier_stall_s'] * 1e6:.1f} "
+             f"disk_fetches={int(s['tier_expert_disk_fetches'])}")
+    assert cells["disk/sata"]["sim_time_s"] >= cells["disk/nvme"]["sim_time_s"]
+
+    out = {"workload": {"model": "mixtral_reduced", "block": BLOCK,
+                        "prompts": len(prompts), "max_new": 10},
+           "cells": cells}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_tiers.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

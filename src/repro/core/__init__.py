@@ -4,16 +4,19 @@ from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
 from repro.core.learned import (LearnedModel, evaluate_recall,
                                 train_from_trace)
+from repro.core.memory_tiers import (SwapQueue, TieredMemoryManager,
+                                     plan_hbm_split)
 from repro.core.offload_engine import OffloadEngine
 from repro.core.paged_kv import PagedKVCache
 from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
                                  SpeculativePrefetcher)
-from repro.core.trace import StepTrace, TraceRecorder
+from repro.core.trace import StepTrace, TierEvent, TraceRecorder
 
 __all__ = [
     "POLICIES", "make_policy", "CostModel", "HardwareProfile", "ModelBytes",
     "ExpertCache", "ExpertStore", "LearnedModel", "LearnedPolicy",
     "LearnedPredictor", "OffloadEngine", "MarkovPredictor",
-    "PagedKVCache", "SpeculativePrefetcher", "StepTrace", "TraceRecorder",
-    "evaluate_recall", "train_from_trace",
+    "PagedKVCache", "SpeculativePrefetcher", "StepTrace", "SwapQueue",
+    "TierEvent", "TieredMemoryManager", "TraceRecorder",
+    "evaluate_recall", "train_from_trace", "plan_hbm_split",
 ]

@@ -25,6 +25,16 @@ class HardwareProfile:
     link_bw: float            # host->device bytes/s
     link_latency: float       # per-transfer fixed cost (s)
     hbm_bw: float             # device memory bytes/s
+    # disk tier (FlashMoE-style SSD I/O model): the host<->disk link the
+    # tiered memory manager prices demotions/promotions with. Defaults
+    # model a PCIe4 NVMe drive; ``sata_ssd`` swaps in a slow profile.
+    disk_bw: float = 3.5e9    # host<->disk bytes/s (sequential)
+    disk_latency: float = 80e-6  # per-transfer fixed cost (s)
+
+    def with_disk(self, bw: float, latency: float) -> "HardwareProfile":
+        """Same compute/link profile over a different disk tier (the
+        bench's tier-latency sweep axis)."""
+        return dataclasses.replace(self, disk_bw=bw, disk_latency=latency)
 
     @classmethod
     def a6000_pcie4(cls):
@@ -135,6 +145,30 @@ class CostModel:
     # ---------------------------------------------------------- timing
     def expert_transfer_time(self) -> float:
         return self.hw.link_latency + self.mb.expert_bytes / self.hw.link_bw
+
+    # ------------------------------------------------- memory tiers
+    def tier_transfer_time(self, nbytes: float, src: str, dst: str) -> float:
+        """Seconds to move ``nbytes`` between memory tiers ("hbm",
+        "host", "disk"). Each hop is latency + bytes/bandwidth on the
+        link it crosses; hbm<->disk stages through host and pays both
+        hops (FlashMoE-style I/O cost model — the tiered memory
+        manager prices every demotion/promotion with this)."""
+        assert src != dst and {src, dst} <= {"hbm", "host", "disk"}
+        t = 0.0
+        if "hbm" in (src, dst):
+            t += self.hw.link_latency + nbytes / self.hw.link_bw
+        if "disk" in (src, dst):
+            t += self.hw.disk_latency + nbytes / self.hw.disk_bw
+        return t
+
+    def expert_fetch_extra_time(self, tier: str) -> float:
+        """Stall a demand expert fetch adds ON TOP of the host->hbm
+        transfer ``token_latency`` already prices per miss: 0 for a
+        host-resident expert, the disk->host hop for a disk-resident
+        one."""
+        if tier == "host":
+            return 0.0
+        return self.hw.disk_latency + self.mb.expert_bytes / self.hw.disk_bw
 
     def layer_compute_time(self, batch: int = 1) -> float:
         tok_flops = (self.mb.attn_flops_per_token(self.ctx_len)

@@ -5,6 +5,13 @@ TPU-friendly layout: one stacked device buffer per weight matrix
 in-place slot updates (``buf.at[slot].set(w)``) standing in for the
 host→HBM DMA. All decisions (hit/miss/evict) happen on the host —
 control plane — exactly like the GPU baseline.
+
+With a ``TieredMemoryManager`` attached (``tiers``), every install
+reports which memory tier the expert's master copy was served from
+(host or simulated disk — a disk fetch stalls the simulated clock),
+and every eviction notifies the arbiter so the victim the *policy*
+chose becomes the demotion target. Without one, behaviour is exactly
+the pre-tiering single-host-tier cache.
 """
 from __future__ import annotations
 
@@ -18,16 +25,35 @@ from repro.core.expert_store import ExpertStore
 
 
 class ExpertCache:
-    """Cache for ONE MoE layer's experts."""
+    """Cache for ONE MoE layer's experts.
+
+    Parameters
+    ----------
+    layer : which MoE layer this cache serves (keys the store).
+    n_slots : device slots; must equal ``policy.capacity``.
+    policy : eviction policy (see ``repro.core.cache_policies``).
+    store : host-tier master copies the misses stream from.
+    shapes : per-weight-matrix shapes, e.g. ``{"w1": (d, ff), ...}``.
+    dtype : device buffer dtype (fp32 on this backend).
+    tiers : optional ``TieredMemoryManager`` — see module docstring.
+
+    Counters (cumulative): ``hits``/``misses`` demand accesses,
+    ``prefetches`` speculative installs actually transferred,
+    ``bytes_transferred`` real store bytes moved host→device.
+    ``last_miss_tiers`` holds the serving tier of each miss of the most
+    recent ``access`` call, aligned with its returned miss list (the
+    engine copies it into the step trace).
+    """
 
     def __init__(self, layer: int, n_slots: int, policy: CachePolicy,
                  store: ExpertStore, shapes: Dict[str, tuple],
-                 dtype=jnp.float32):
+                 dtype=jnp.float32, tiers=None):
         assert policy.capacity == n_slots
         self.layer = layer
         self.n_slots = n_slots
         self.policy = policy
         self.store = store
+        self.tiers = tiers
         self.buffers = {k: jnp.zeros((n_slots, *s), dtype) for k, s in shapes.items()}
         self.slot_of: Dict[int, int] = {}
         self._free: List[int] = list(range(n_slots))
@@ -36,17 +62,21 @@ class ExpertCache:
         self.misses = 0
         self.prefetches = 0
         self.bytes_transferred = 0
+        self.last_miss_tiers: Tuple[str, ...] = ()
 
     # ------------------------------------------------------------------
     def cached_ids(self) -> Tuple[int, ...]:
+        """Resident expert ids, sorted (the trace's cache snapshot)."""
         return tuple(sorted(self.slot_of))
 
     def contains(self, eid: int) -> bool:
+        """Hit test without touching policy state."""
         return eid in self.slot_of
 
-    def _install(self, eid: int, pinned: frozenset = frozenset()
-                 ) -> Tuple[int, Optional[int]]:
-        """Fetch eid from the store into a slot. Returns (slot, evicted)."""
+    def _install(self, eid: int, pinned: frozenset = frozenset(), *,
+                 demand: bool = True) -> Tuple[int, Optional[int], str]:
+        """Fetch eid from the store into a slot. Returns
+        (slot, evicted, tier served from)."""
         evicted = None
         if self._free:
             slot = self._free.pop()
@@ -55,6 +85,11 @@ class ExpertCache:
             slot = self.slot_of.pop(victim)
             self.policy.remove(victim)
             evicted = victim
+            if self.tiers is not None:
+                self.tiers.expert_evicted((self.layer, victim))
+        tier = "host"
+        if self.tiers is not None:
+            tier = self.tiers.fetch_expert((self.layer, eid), demand=demand)
         w = self.store.fetch((self.layer, eid))
         for k, v in w.items():
             self.buffers[k] = self.buffers[k].at[slot].set(
@@ -62,7 +97,7 @@ class ExpertCache:
         self.slot_of[eid] = slot
         self.policy.on_insert(eid)
         self.bytes_transferred += self.store.expert_nbytes((self.layer, eid))
-        return slot, evicted
+        return slot, evicted, tier
 
     def access(self, eids: Sequence[int]
                ) -> Tuple[List[int], List[int], List[int]]:
@@ -71,21 +106,25 @@ class ExpertCache:
         All of ``eids`` are pinned while installing so an expert needed
         by the current token can never evict another one of them; the
         caller chunks to ≤ capacity if the working set exceeds it.
+        ``last_miss_tiers`` is left aligned with the returned misses.
         """
         assert len(set(eids)) <= self.n_slots, "working set exceeds cache"
         pinned = frozenset(eids)
         hits, misses, evicted = [], [], []
+        miss_tiers: List[str] = []
         for eid in eids:
             if eid in self.slot_of:
                 hits.append(eid)
                 self.policy.on_access(eid)
             else:
                 misses.append(eid)
-                _, ev = self._install(eid, pinned)
+                _, ev, tier = self._install(eid, pinned)
+                miss_tiers.append(tier)
                 if ev is not None:
                     evicted.append(ev)
         self.hits += len(hits)
         self.misses += len(misses)
+        self.last_miss_tiers = tuple(miss_tiers)
         self.policy.tick()
         return hits, misses, evicted
 
@@ -97,7 +136,7 @@ class ExpertCache:
             if eid in self.slot_of:
                 self.policy.on_access(eid)
                 continue
-            self._install(eid)
+            self._install(eid, demand=False)
             moved.append(eid)
         self.prefetches += len(moved)
         return moved
@@ -108,5 +147,7 @@ class ExpertCache:
         return {k: v[slots] for k, v in self.buffers.items()}
 
     def device_nbytes(self) -> int:
+        """Device bytes this cache's slot buffers pin (static — slots
+        are allocated up front, not per resident expert)."""
         return sum(int(np.prod(v.shape)) * v.dtype.itemsize
                    for v in self.buffers.values())

@@ -56,6 +56,7 @@ class OffloadEngine:
                  hw: Optional[HardwareProfile] = None,
                  overlap: bool = False,
                  trace: Optional[TraceRecorder] = None,
+                 tiers=None,   # repro.core.memory_tiers.TieredMemoryManager
                  seed: int = 0):
         assert cfg.is_moe, "offloading targets MoE experts"
         assert prefetch in (None, "spec", "markov", "learned")
@@ -104,6 +105,22 @@ class OffloadEngine:
         self._prompt_id = 0
         self._rng = np.random.default_rng(seed)
         self._prev_acts: Dict[int, Tuple[int, ...]] = {}
+        self.tiers = None
+        if tiers is not None:
+            self.attach_tiers(tiers)
+
+    def attach_tiers(self, tiers) -> None:
+        """Wire a ``TieredMemoryManager`` in: register every expert's
+        master copy (real store bytes) and point the per-layer caches
+        at the arbiter. Call once, before any decoding."""
+        assert self.tiers is None, "tiers already attached"
+        self.tiers = tiers
+        if tiers.trace is None:
+            tiers.trace = self.trace
+        for key in self.store.keys():
+            tiers.register_expert(key, self.store.expert_nbytes(key))
+        for c in self.caches:
+            c.tiers = tiers
 
     # ------------------------------------------------------------------
     def init_state(self, batch: int, cache_len: int):
@@ -183,6 +200,7 @@ class OffloadEngine:
         hits: List[int] = []
         misses: List[int] = []
         evicted: List[int] = []
+        miss_tiers: List[str] = []
         y = jnp.zeros((B, self.cfg.d_model), jnp.float32)
         cap = cache.n_slots
         for c0 in range(0, len(union), cap):
@@ -191,6 +209,7 @@ class OffloadEngine:
             hits += h_
             misses += m_
             evicted += e_
+            miss_tiers += list(cache.last_miss_tiers)
             w = cache.gather(chunk)
             comb = np.zeros((B, len(chunk)), np.float32)
             col = {e: i for i, e in enumerate(chunk)}
@@ -228,7 +247,10 @@ class OffloadEngine:
             hits=tuple(hits), misses=tuple(misses), evicted=tuple(evicted),
             spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved),
             request_ids=req_ids, request_token_idx=req_tok,
-            request_activated=req_act, engine_step=self._steps_done)
+            request_activated=req_act, engine_step=self._steps_done,
+            # tier attribution only when an arbiter is attached, so
+            # pre-tiering traces stay byte-identical
+            miss_tiers=(tuple(miss_tiers) if self.tiers is not None else ()))
         return h, acts, len(misses)
 
     # ------------------------------------------------------------------
@@ -343,6 +365,13 @@ class OffloadEngine:
             step_misses / cfg.num_layers,
             prefetch_per_layer=step_prefetch / cfg.num_layers,
             batch=n_active)
+        if self.tiers is not None:
+            # tier stalls (disk-resident demand fetches, in-flight
+            # demotion waits) land on top of the host-link pricing
+            # above; then the arbiter's clock catches up so background
+            # swaps complete
+            self.sim_time += self.tiers.drain_stall()
+            self.tiers.advance(self.sim_time)
         self.tokens_done += n_active
         self._steps_done += 1
         return logits, state
@@ -432,7 +461,7 @@ class OffloadEngine:
         pre = sum(c.prefetches for c in self.caches)
         prec, rec = self.trace.cache_precision_recall()
         sp, sr = self.trace.spec_precision_recall()
-        return {
+        s = {
             "hits": hits, "misses": misses, "prefetches": pre,
             "hit_rate": hits / max(hits + misses, 1),
             "cache_precision": prec, "cache_recall": rec,
@@ -446,3 +475,6 @@ class OffloadEngine:
                 self.cfg.num_experts - self.cache_slots,
                 kv_tokens=kv_tokens),
         }
+        if self.tiers is not None:
+            s.update(self.tiers.stats())
+        return s

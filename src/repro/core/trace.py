@@ -35,6 +35,10 @@ class StepTrace:
     evicted: Tuple[int, ...]
     spec_guess: Tuple[int, ...] = ()        # speculative guesses for THIS layer
     prefetched: Tuple[int, ...] = ()        # experts actually pre-admitted
+    # memory tier each miss was served from ("host"/"disk"), aligned
+    # with ``misses``; empty when no tier manager is attached (every
+    # fetch then comes from the host ExpertStore)
+    miss_tiers: Tuple[str, ...] = ()
     # global engine step (one per decode_tokens call): aligns the layers
     # of one token pass so the learned predictor's same-token
     # previous-layer transition feature survives batched/interleaved
@@ -56,12 +60,35 @@ class StepTrace:
         return [(self.prompt_id, self.token_idx, self.activated)]
 
 
+@dataclasses.dataclass
+class TierEvent:
+    """One inter-tier movement (see ``repro.core.memory_tiers``):
+    ``kind`` "expert" or "kv", ``event`` "demote"/"promote",
+    ``src``/``dst`` in {"hbm","host","disk"}, real payload ``nbytes``,
+    ``key`` = (layer, expert_id) or (rid,), and the simulated time the
+    transfer was issued. Demand-miss tiers live per-step in
+    ``StepTrace.miss_tiers`` instead (one entry per miss, not per
+    movement)."""
+    kind: str
+    event: str
+    src: str
+    dst: str
+    nbytes: int
+    key: Tuple[int, ...] = ()
+    sim_time: float = 0.0
+
+
 class TraceRecorder:
     def __init__(self):
         self.steps: List[StepTrace] = []
+        self.tier_events: List[TierEvent] = []
 
     def record(self, **kw) -> None:
         self.steps.append(StepTrace(**kw))
+
+    def record_tier(self, **kw) -> None:
+        """Append a ``TierEvent`` (called by ``TieredMemoryManager``)."""
+        self.tier_events.append(TierEvent(**kw))
 
     # ------------------------------------------------------------ stats
     def cache_precision_recall(self, *, layer: Optional[int] = None
@@ -178,6 +205,31 @@ class TraceRecorder:
     def transfers(self) -> int:
         return sum(len(s.misses) + len(s.prefetched) for s in self.steps)
 
+    # ------------------------------------------------------ tier events
+    def tier_transfer_stats(self) -> Dict[str, Dict[str, int]]:
+        """Aggregate ``tier_events`` into {"kind:src->dst": {count,
+        bytes}} — the auditable view of what the memory arbiter moved
+        (docs/traces.md documents the schema)."""
+        out: Dict[str, Dict[str, int]] = {}
+        for e in self.tier_events:
+            k = f"{e.kind}:{e.src}->{e.dst}"
+            d = out.setdefault(k, {"count": 0, "bytes": 0})
+            d["count"] += 1
+            d["bytes"] += e.nbytes
+        return out
+
+    def miss_tier_counts(self) -> Dict[str, int]:
+        """Demand misses by the tier that served them. Steps recorded
+        without a tier manager count as "host" (the pre-tiering
+        behaviour: every fetch came from the host store)."""
+        c: Counter = Counter()
+        for s in self.steps:
+            if s.miss_tiers:
+                c.update(s.miss_tiers)
+            else:
+                c["host"] += len(s.misses)
+        return dict(c)
+
     def temporal_locality(self, *, layer: Optional[int] = None) -> float:
         """P(expert of token t also used by token t-1) — the Mixtral-paper
         statistic the baseline's caching exploits."""
@@ -229,7 +281,18 @@ class TraceRecorder:
         return "\n".join(lines)
 
     def to_json(self) -> str:
-        return json.dumps([dataclasses.asdict(s) for s in self.steps])
+        """Serialize. Stays the legacy flat step list whenever there
+        are no tier events (bit-compatible with every earlier reader);
+        with tier events it becomes ``{"steps": [...],
+        "tier_events": [...]}`` — ``from_json`` loads both shapes (the
+        format docs/traces.md specifies)."""
+        steps = [dataclasses.asdict(s) for s in self.steps]
+        if not self.tier_events:
+            return json.dumps(steps)
+        return json.dumps({
+            "steps": steps,
+            "tier_events": [dataclasses.asdict(e) for e in self.tier_events],
+        })
 
     @classmethod
     def from_json(cls, s: str) -> "TraceRecorder":
@@ -242,7 +305,17 @@ class TraceRecorder:
         # roundtrip contract the learned-predictor trainer relies on
         known = {f.name for f in dataclasses.fields(StepTrace)}
         tr = cls()
-        for d in json.loads(s):
+        data = json.loads(s)
+        events = []
+        if isinstance(data, dict):
+            events = data.get("tier_events", [])
+            data = data["steps"]
+        for d in data:
             tr.steps.append(StepTrace(**{k: detuple(v) for k, v in d.items()
                                          if k in known}))
+        eknown = {f.name for f in dataclasses.fields(TierEvent)}
+        for d in events:
+            tr.tier_events.append(TierEvent(**{k: detuple(v)
+                                               for k, v in d.items()
+                                               if k in eknown}))
         return tr

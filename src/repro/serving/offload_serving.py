@@ -28,6 +28,19 @@ attention path is bit-exact with the dense one, so both layouts — and
 ``OffloadEngine.generate`` — produce identical tokens, traces, and
 simulated clocks at temperature 0 (test-enforced).
 
+With ``hbm_budget_bytes=`` the server sizes itself from ONE device
+byte budget instead of separate ``cache_slots``/``kv_num_blocks``
+knobs: ``repro.core.memory_tiers.plan_hbm_split`` divides it between
+expert slots and the KV pool, and a ``TieredMemoryManager`` arbitrates
+the HBM/host/disk hierarchy (expert masters spill to a simulated SSD
+under host pressure; demand disk misses stall the clock, prefetches
+hide the hop). Preemption then PARKS the victim's KV block contents in
+the host tier through a double-buffered swap queue and the request
+RESUMES from them at its parked position on re-admission — bit-exact
+with replay-as-prefill but strictly fewer steps under overcommit
+(``resume_from_host=False`` restores the replay behaviour; both are
+test-enforced and bench-gated). See docs/memory.md.
+
 Long prompts need not stream one token per step: with
 ``prefill_chunk > 1`` (paged layout only) a catching-up request pushes
 a CHUNK of its known tokens per step as *virtual rows* — extra batch
@@ -68,7 +81,8 @@ from typing import Deque, Dict, List, Optional, Sequence
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.costmodel import HardwareProfile
+from repro.core.costmodel import HardwareProfile, ModelBytes
+from repro.core.memory_tiers import TieredMemoryManager, plan_hbm_split
 from repro.core.offload_engine import OffloadEngine
 from repro.core.paged_kv import PagedKVCache
 from repro.core.trace import TraceRecorder
@@ -77,10 +91,17 @@ from repro.serving.sampler import request_key, sample_token
 from repro.serving.scheduler import Scheduler, make_scheduler
 
 
+def _planned_expert_bytes(cfg) -> int:
+    """HBM bytes ONE expert-cache slot pins in one layer: the fp32
+    device buffers (w1/w3/w2). Independent of host-store quantization —
+    dequantization happens at install, the slot is always fp32."""
+    return 3 * cfg.d_model * cfg.expert_d_ff * 4
+
+
 class ContinuousOffloadServer:
     """Continuous-batching scheduler over a shared expert cache."""
 
-    def __init__(self, params, cfg, *, cache_slots, max_batch: int = 4,
+    def __init__(self, params, cfg, *, cache_slots=None, max_batch: int = 4,
                  cache_len: int = 256, policy: str = "lru",
                  policy_kw: Optional[dict] = None, learned_model=None,
                  prefetch: Optional[str] = None, quant: str = "none",
@@ -91,7 +112,12 @@ class ContinuousOffloadServer:
                  kv_num_blocks: Optional[int] = None,
                  kv_watermark: float = 0.0,
                  scheduler="fifo", prefill_chunk: int = 1,
-                 step_tokens: Optional[int] = None):
+                 step_tokens: Optional[int] = None,
+                 hbm_budget_bytes: Optional[int] = None,
+                 tier_expert_frac: float = 0.5,
+                 host_budget_bytes: Optional[int] = None,
+                 resume_from_host: bool = True,
+                 tier_lanes: int = 2):
         assert max_batch >= 1
         assert kv_layout in ("paged", "dense")
         assert 0.0 <= kv_watermark < 1.0
@@ -100,6 +126,29 @@ class ContinuousOffloadServer:
             "chunked prefill needs paged KV (virtual rows share a " \
             "block-table row; dense KV is addressed by batch row)"
         self.cfg = cfg
+        # ---- tiered-memory arbitration (repro.core.memory_tiers) -----
+        # ``hbm_budget_bytes`` replaces the independent cache_slots /
+        # kv_num_blocks sizing with ONE budget the arbiter splits
+        # (``tier_expert_frac`` of it funds expert slots, the rest the
+        # KV pool); preempted requests then park their KV in the host
+        # tier and RESUME from it instead of replaying tokens as
+        # prefill (``resume_from_host=False`` keeps iso-memory replay
+        # for comparison — the tier bench's baseline arm).
+        self.resume_from_host = resume_from_host
+        if hbm_budget_bytes is not None:
+            assert kv_layout == "paged", "the HBM arbiter needs paged KV"
+            assert cache_slots is None and kv_num_blocks is None, \
+                "hbm_budget_bytes replaces cache_slots/kv_num_blocks"
+            mb = ModelBytes.from_config(cfg)
+            cache_slots, kv_num_blocks = plan_hbm_split(
+                hbm_budget_bytes, num_layers=cfg.num_layers,
+                num_experts=cfg.num_experts,
+                expert_bytes=_planned_expert_bytes(cfg),
+                kv_block_bytes=kv_block_size * mb.kv_bytes_per_token
+                * cfg.num_layers,
+                expert_frac=tier_expert_frac)
+        assert cache_slots is not None, \
+            "pass cache_slots or hbm_budget_bytes"
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         # per-step token budget: every active request is guaranteed one
@@ -140,6 +189,17 @@ class ContinuousOffloadServer:
             self.state = self.paged.state
         else:
             self.state = self.engine.init_state(max_batch, cache_len)
+        self.tiers: Optional[TieredMemoryManager] = None
+        if hbm_budget_bytes is not None:
+            self.tiers = TieredMemoryManager(
+                self.engine.cost, hbm_bytes=hbm_budget_bytes,
+                host_bytes=host_budget_bytes, lanes=tier_lanes,
+                trace=self.trace)
+            self.tiers.set_hbm_plan(
+                sum(c.device_nbytes() for c in self.engine.caches),
+                self.engine.cost.kv_block_bytes(self.kv_block_size)
+                * self.paged.num_blocks)
+            self.engine.attach_tiers(self.tiers)
         self.slots: List[Optional[Request]] = [None] * max_batch
         self.queue: Deque[Request] = deque()
         self.finished: Dict[int, Request] = {}
@@ -198,6 +258,11 @@ class ContinuousOffloadServer:
             self.paged = PagedKVCache(need, self.kv_block_size,
                                       cfg=self.cfg, dtype=jnp.float32)
             self.state = self.paged.state
+            if self.tiers is not None:
+                self.tiers.set_hbm_plan(
+                    sum(c.device_nbytes() for c in self.engine.caches),
+                    self.engine.cost.kv_block_bytes(self.kv_block_size)
+                    * self.paged.num_blocks)
             return
         if n <= self.cache_len:
             return
@@ -246,13 +311,23 @@ class ContinuousOffloadServer:
             if req.admit_step < 0:
                 req.admit_step = self.step_count
             self.slots[req.slot] = req
+            if self.tiers is not None and self.tiers.is_parked(req.rid):
+                self._restore_kv(req)
 
     def _kv_admit(self, req: Request) -> bool:
-        """Reserve blocks for a joining request's known tokens."""
+        """Reserve blocks for a joining request's known tokens.
+
+        With the tier arbiter attached, the watermark check consults
+        it: blocks whose park-demotion is still in flight (freed to
+        the allocator, bytes still being copied out over the simulated
+        clock) do not count as free, so admission cannot claim memory
+        that is not actually available yet."""
         need = self.paged.blocks_for(len(req.tokens))
         reserve = int(self.kv_watermark * self.paged.num_blocks)
-        if self.num_active > 0 and \
-                need > self.paged.free_blocks - reserve:
+        free = self.paged.free_blocks
+        if self.tiers is not None:
+            free -= self.tiers.kv_inflight_blocks(self.engine.sim_time)
+        if self.num_active > 0 and need > free - reserve:
             return False
         self.paged.allocate(req.rid)
         if not self.paged.reserve(req.rid, len(req.tokens)):
@@ -261,18 +336,55 @@ class ContinuousOffloadServer:
         return True
 
     def _preempt(self, req: Request) -> None:
-        """Evict a running request to the queue front: its KV blocks
-        are freed and its tokens (prompt + everything already sampled)
-        replay as prefill on re-admission — generated text is a pure
-        function of the tokens, so preemption costs steps, never
-        output."""
+        """Evict a running request to the queue front. Without the
+        tier arbiter its KV blocks are freed and its tokens (prompt +
+        everything already sampled) replay as prefill on re-admission —
+        generated text is a pure function of the tokens, so preemption
+        costs steps, never output. With the arbiter (and
+        ``resume_from_host``), the blocks' CONTENTS are parked in the
+        host tier first (async demotion through the swap queue) and the
+        request resumes from them instead of replaying — same output
+        invariant (bit-exact KV snapshot), far fewer steps."""
+        if self.tiers is not None and self.resume_from_host and req.pos > 0:
+            self._park_kv(req)
+        else:
+            req.pos = 0
         self.paged.free_request(req.rid)
         self.slots[req.slot] = None
         req.slot = -1
-        req.pos = 0
         req.preemptions += 1
         self.kv_preemptions += 1
         self.queue.appendleft(req)
+
+    def _park_kv(self, req: Request) -> None:
+        """Snapshot the blocks covering ``req``'s fed tokens to the
+        host tier (real array bytes; the pool blocks are then freed by
+        the caller but stay accounted in flight until the demote
+        transfer completes)."""
+        blocks = self.paged.tables[req.rid][:self.paged.blocks_for(req.pos)]
+        idx = np.asarray(blocks, np.int32)
+        arrays = [{k: np.asarray(v[idx]) for k, v in layer.items()}
+                  for layer in self.state["layers"]]
+        nbytes = sum(a.nbytes for layer in arrays for a in layer.values())
+        self.tiers.park_kv(req.rid, arrays, nbytes, len(blocks), req.pos,
+                           engine_step=self.step_count)
+
+    def _restore_kv(self, req: Request) -> None:
+        """Promote a parked request's KV into its freshly reserved
+        blocks (possibly different physical ids — contents are
+        scattered by the NEW table order) and resume at the parked
+        position. The promote stall lands on the engine clock at the
+        next step."""
+        arrays, pos = self.tiers.resume_kv(req.rid)
+        n = len(next(iter(arrays[0].values()))) if arrays else 0
+        if n:
+            idx = jnp.asarray(self.paged.tables[req.rid][:n], jnp.int32)
+            for l, saved in enumerate(arrays):
+                layer = self.state["layers"][l]
+                for k, v in saved.items():
+                    layer[k] = layer[k].at[idx].set(
+                        jnp.asarray(v, layer[k].dtype))
+        req.pos = pos
 
     def _ensure_kv(self, chunks: Optional[Dict[int, int]] = None) -> None:
         """Grow each active request's block table to cover this step's
@@ -338,6 +450,11 @@ class ContinuousOffloadServer:
         chunks = self._plan_chunks([r for r in self.slots if r is not None])
         if self.paged is not None:
             self._ensure_kv(chunks)
+            if self.tiers is not None:
+                # growth that claimed blocks whose park-demotion is
+                # still copying out must wait for those lanes to land
+                self.tiers.note_block_claims(self.paged.free_blocks,
+                                             self.engine.sim_time)
         active = [r is not None for r in self.slots]
         if not any(active):
             return []

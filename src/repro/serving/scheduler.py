@@ -40,9 +40,11 @@ from repro.serving.request import Request
 
 def remaining_tokens(req: Request) -> int:
     """Tokens this request still needs a step for: unfed known tokens
-    plus the decode tokens not yet sampled. A preempted request's
-    replay cost (pos reset to 0) is counted — SJF sees the true
-    remaining work, not the pre-preemption estimate."""
+    plus the decode tokens not yet sampled. A preempted request's true
+    re-entry cost is counted either way — replay-as-prefill resets
+    ``pos`` to 0 (full replay charged), while resume-from-host keeps
+    ``pos`` at the parked position (only the real remainder) — so SJF
+    sees the actual remaining work, not the pre-preemption estimate."""
     unfed = len(req.tokens) - req.pos
     unsampled = req.max_new - len(req.out)
     return unfed + unsampled
@@ -140,4 +142,5 @@ SCHEDULERS: Dict[str, type] = {
 
 
 def make_scheduler(name: str, **kw) -> Scheduler:
+    """Instantiate a scheduler by registry name (see ``SCHEDULERS``)."""
     return SCHEDULERS[name](**kw)

@@ -1,0 +1,322 @@
+"""Unified HBM->host->disk memory arbiter: tier invariants.
+
+The load-bearing properties: bytes are conserved across every
+demotion/promotion (nothing leaks, nothing is double-counted), the HBM
+split never exceeds the budget it was planned from, resume-from-host is
+BIT-EXACT with replay-as-prefill (parking KV is a pure relocation of
+state, never a change to it), and the double-buffered swap queue only
+stalls a step on transfers it actually depends on.
+"""
+import dataclasses
+import json
+
+import jax
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import (CostModel, HardwareProfile, ModelBytes, OffloadEngine,
+                        SwapQueue, TieredMemoryManager, TraceRecorder,
+                        plan_hbm_split)
+from repro.models import transformer as tf
+from repro.serving import ContinuousOffloadServer
+
+
+@pytest.fixture(scope="module")
+def mixtral_setup():
+    cfg = reduced(get_config("mixtral-8x7b"), layers=3, d_model=96, experts=8)
+    cfg = dataclasses.replace(cfg, dtype="float32", num_experts_per_tok=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _cost():
+    mb = ModelBytes(num_layers=2, d_model=8, expert_d_ff=16, num_experts=4,
+                    top_k=2, expert_bytes=1000, attn_bytes_per_layer=100,
+                    vocab_bytes=100, kv_bytes_per_token=8)
+    return CostModel(HardwareProfile.a6000_pcie4(), mb)
+
+
+EB = 1000  # expert master bytes in the unit-level manager tests
+
+
+# ------------------------------------------------------------ plan split
+def test_plan_hbm_split_respects_budget():
+    slots, blocks = plan_hbm_split(
+        100_000, num_layers=4, num_experts=8,
+        expert_bytes=2_000, kv_block_bytes=500, expert_frac=0.5)
+    assert slots * 4 * 2_000 + blocks * 500 <= 100_000
+    # the fractional-slot remainder funds KV, it is not stranded
+    assert blocks == (100_000 - slots * 4 * 2_000) // 500
+    assert 1 <= slots <= 8
+
+
+def test_plan_hbm_split_floors_bind_on_tiny_budgets():
+    slots, blocks = plan_hbm_split(
+        10, num_layers=4, num_experts=8,
+        expert_bytes=2_000, kv_block_bytes=500)
+    assert (slots, blocks) == (1, 1)  # runnable, intentionally overcommitted
+
+
+def test_plan_hbm_split_caps_slots_at_num_experts():
+    slots, _ = plan_hbm_split(
+        10**9, num_layers=2, num_experts=4,
+        expert_bytes=1_000, kv_block_bytes=500, expert_frac=0.9)
+    assert slots == 4
+
+
+# ------------------------------------------------------------ swap queue
+def test_swap_queue_double_buffering_serializes_third_transfer():
+    q = SwapQueue(lanes=2)
+    assert q.submit(0.0, 1.0) == 1.0
+    assert q.submit(0.0, 1.0) == 1.0
+    # both lanes busy: the third transfer waits for the earliest lane
+    assert q.submit(0.0, 1.0) == 2.0
+    assert len(q.pending(0.5)) == 3
+    assert len(q.drain(1.0)) == 2
+    assert len(q.pending(1.0)) == 1
+    assert (q.submitted, q.completed) == (3, 2)
+
+
+def test_swap_queue_single_lane_is_fully_serial():
+    q = SwapQueue(lanes=1)
+    assert [q.submit(0.0, 2.0) for _ in range(3)] == [2.0, 4.0, 6.0]
+
+
+# ----------------------------------------------- byte conservation (unit)
+def _total_master_bytes(tm):
+    eb = tm.expert_bytes_by_tier()
+    return eb["host"] + eb["disk"]
+
+
+def test_bytes_conserved_under_register_spill_park_resume():
+    tm = TieredMemoryManager(_cost(), hbm_bytes=10_000, host_bytes=3 * EB)
+    for i in range(5):            # 5 masters, host holds 3 -> 2 spill
+        tm.register_expert((0, i), EB)
+    assert tm.host_used + tm.disk_used == 5 * EB
+    assert tm.expert_bytes_by_tier() == {"host": 3 * EB, "disk": 2 * EB}
+
+    # parking KV squeezes experts out of host; totals stay conserved
+    tm.park_kv(7, arrays=[], nbytes=2 * EB, n_blocks=4, pos=9)
+    assert tm.host_used + tm.disk_used == 5 * EB + 2 * EB
+    assert tm.host_used <= 3 * EB
+    assert tm.parked_kv_bytes() == 2 * EB and tm.is_parked(7)
+
+    arrays, pos = tm.resume_kv(7)
+    assert (arrays, pos) == ([], 9)
+    assert tm.host_used + tm.disk_used == 5 * EB
+    assert not tm.is_parked(7)
+    # occupancy in stats mirrors the internal ledgers exactly
+    s = tm.stats()
+    assert s["tier_host_used_bytes"] == tm.host_used
+    assert s["tier_disk_used_bytes"] == tm.disk_used
+    assert s["tier_host_used_bytes"] <= s["tier_host_budget_bytes"]
+    assert s["tier_kv_parks"] == 1 and s["tier_kv_resumes"] == 1
+
+
+def test_drop_kv_releases_parked_bytes():
+    tm = TieredMemoryManager(_cost(), hbm_bytes=10_000)
+    tm.park_kv(1, arrays=[], nbytes=500, n_blocks=1, pos=3)
+    tm.drop_kv(1)
+    assert tm.host_used == 0 and not tm.is_parked(1)
+
+
+def test_demand_disk_fetch_stalls_but_prefetch_hides_it():
+    tm = TieredMemoryManager(_cost(), hbm_bytes=10_000, host_bytes=EB)
+    tm.register_expert((0, 0), EB)            # host
+    tm.register_expert((0, 1), EB)            # overflow -> disk
+    assert tm.expert_tier((0, 1)) == "disk"
+
+    assert tm.fetch_expert((0, 0), demand=True) == "host"
+    assert tm.drain_stall() == 0.0            # host fetch: no extra stall
+
+    assert tm.fetch_expert((0, 1), demand=True) == "disk"
+    stall = tm.drain_stall()
+    assert stall == pytest.approx(tm.cost.expert_fetch_extra_time("disk"))
+    assert stall > 0
+
+    # the host is full, so a new master overflows to disk; PREFETCHING
+    # it rides the swap queue (possibly plus a promotion demote) instead
+    # of stalling
+    tm.register_expert((1, 0), EB)
+    assert tm.expert_tier((1, 0)) == "disk"
+    before = tm.queue.submitted
+    tm.fetch_expert((1, 0), demand=False)
+    assert tm.drain_stall() == 0.0
+    assert tm.queue.submitted >= before + 1
+
+
+def test_inflight_blocks_gate_only_stalls_real_claims():
+    tm = TieredMemoryManager(_cost(), hbm_bytes=10_000)
+    tm.park_kv(1, arrays=[], nbytes=800, n_blocks=5, pos=4)
+    assert tm.kv_inflight_blocks(0.0) == 5
+    # plenty of other free blocks: the step never waits on the demote
+    assert tm.note_block_claims(free_blocks_now=10, now=0.0) == 0.0
+    # claiming into the in-flight region waits until the demote lands
+    wait = tm.note_block_claims(free_blocks_now=2, now=0.0)
+    assert wait > 0
+    tm.advance(wait)
+    assert tm.kv_inflight_blocks() == 0
+    assert tm.note_block_claims(free_blocks_now=0) == 0.0
+
+
+# ------------------------------------------------- serving-level invariants
+def _tiered_server(params, cfg, *, slots, blocks, block_size=8, **kw):
+    """Build a tiered server whose plan lands exactly on (slots, blocks)
+    by constructing the budget from the same prices the planner uses."""
+    eb = 3 * cfg.d_model * cfg.expert_d_ff * 4
+    kvb = block_size * ModelBytes.from_config(cfg).kv_bytes_per_token \
+        * cfg.num_layers
+    budget = slots * cfg.num_layers * eb + blocks * kvb
+    frac = slots * cfg.num_layers * eb / budget
+    srv = ContinuousOffloadServer(
+        params, cfg, max_batch=2, cache_len=64, policy="lru",
+        kv_block_size=block_size, hbm_budget_bytes=budget,
+        tier_expert_frac=min(frac + 1e-9, 1 - 1e-9), **kw)
+    assert srv.engine.caches[0].n_slots == slots
+    assert srv.paged.num_blocks == blocks
+    return srv
+
+
+def test_hbm_occupancy_sums_to_budget(mixtral_setup):
+    cfg, params = mixtral_setup
+    srv = _tiered_server(params, cfg, slots=4, blocks=8)
+    s = srv.stats()
+    assert s["tier_hbm_expert_bytes"] == \
+        sum(c.device_nbytes() for c in srv.engine.caches)
+    assert s["tier_hbm_kv_bytes"] == \
+        srv.engine.cost.kv_block_bytes(srv.kv_block_size) \
+        * srv.paged.num_blocks
+    assert s["tier_hbm_expert_bytes"] + s["tier_hbm_kv_bytes"] \
+        <= s["tier_hbm_budget_bytes"]
+
+
+def test_resume_from_host_bit_exact_with_replay_and_solo(mixtral_setup):
+    """Overcommitted pool, two requests: the preempted one resumes from
+    host-tier KV. Tokens must equal BOTH the replay-as-prefill run and
+    the uncontended solo runs, and resuming must drain in fewer steps
+    than replaying (the bench's headline claim, asserted in-tree)."""
+    cfg, params = mixtral_setup
+    p0, p1 = [1, 2, 3, 4], [9, 8, 7, 6]
+    solo = []
+    for p in (p0, p1):
+        eng = OffloadEngine(params, cfg, cache_slots=4, policy="lru")
+        solo.append(eng.generate(p, 12))
+
+    outs, steps, parks = {}, {}, {}
+    for mode in (True, False):
+        srv = _tiered_server(params, cfg, slots=4, blocks=2,
+                             resume_from_host=mode, prefill_chunk=4)
+        r0 = srv.submit(p0, max_new=12)
+        r1 = srv.submit(p1, max_new=12)
+        outs[mode] = [srv.run()[r] for r in (r0, r1)]
+        steps[mode] = srv.step_count
+        parks[mode] = srv.stats()["tier_kv_parks"]
+        assert srv.kv_preemptions >= 1, "pool did not overcommit"
+
+    assert outs[True] == outs[False] == solo
+    assert parks[True] >= 1 and parks[False] == 0
+    assert steps[True] < steps[False], \
+        "resume-from-host must beat replay-as-prefill on steps-to-drain"
+
+
+def test_parked_resume_is_bit_exact_with_uncontended_run(mixtral_setup):
+    """Same two requests with a big enough pool (no preemption at all):
+    the contended resume-from-host run must produce identical text —
+    parked KV round-trips bit-exactly through the host tier."""
+    cfg, params = mixtral_setup
+    p0, p1 = [1, 2, 3, 4], [9, 8, 7, 6]
+    big = _tiered_server(params, cfg, slots=4, blocks=16)
+    rids = [big.submit(p, max_new=12) for p in (p0, p1)]
+    ref = [big.run()[r] for r in rids]
+    assert big.kv_preemptions == 0
+
+    small = _tiered_server(params, cfg, slots=4, blocks=2, prefill_chunk=4)
+    rids = [small.submit(p, max_new=12) for p in (p0, p1)]
+    out = [small.run()[r] for r in rids]
+    assert small.stats()["tier_kv_resumes"] >= 1
+    assert out == ref
+
+
+def test_tier_stall_advances_engine_clock(mixtral_setup):
+    """Disk demand fetches and KV promotes are not free: the tiered
+    run's simulated clock must exceed an identically-shaped run that
+    never leaves the host tier."""
+    cfg, params = mixtral_setup
+    eb = 3 * cfg.d_model * cfg.expert_d_ff * 4
+
+    def run(host_budget):
+        srv = _tiered_server(params, cfg, slots=2, blocks=8,
+                             host_budget_bytes=host_budget)
+        srv.submit([1, 2, 3, 4, 5], max_new=10)
+        srv.run()
+        return srv.stats()
+
+    tight = run(host_budget=4 * cfg.num_layers * eb)   # half the masters
+    roomy = run(host_budget=None)
+    assert roomy["tier_expert_disk_fetches"] == 0
+    assert tight["tier_expert_disk_fetches"] > 0
+    assert tight["tier_stall_s"] > 0
+    assert tight["sim_time_s"] > roomy["sim_time_s"]
+    assert tight["sim_time_s"] == pytest.approx(
+        roomy["sim_time_s"] + tight["tier_stall_s"])
+
+
+def test_tiered_run_matches_untired_tokens(mixtral_setup):
+    """Attaching the arbiter never changes generated text — only the
+    memory/time accounting (the bit-transparency contract every other
+    serving feature keeps)."""
+    cfg, params = mixtral_setup
+    tiered = _tiered_server(params, cfg, slots=4, blocks=8)
+    plain = ContinuousOffloadServer(
+        params, cfg, max_batch=2, cache_len=64, policy="lru",
+        kv_block_size=8, cache_slots=4, kv_num_blocks=8)
+    outs = []
+    for srv in (tiered, plain):
+        rids = [srv.submit(p, max_new=8) for p in ([1, 2, 3], [7, 6, 5, 4])]
+        out = srv.run()
+        outs.append([out[r] for r in rids])
+    assert outs[0] == outs[1]
+
+
+# --------------------------------------------------------- trace plumbing
+def test_trace_json_roundtrip_with_tier_events(mixtral_setup):
+    cfg, params = mixtral_setup
+    srv = _tiered_server(params, cfg, slots=4, blocks=2, prefill_chunk=4)
+    for p in ([1, 2, 3, 4], [9, 8, 7, 6]):
+        srv.submit(p, max_new=10)
+    srv.run()
+    assert srv.trace.tier_events, "overcommit must emit tier events"
+
+    blob = srv.trace.to_json()
+    assert isinstance(json.loads(blob), dict)       # new two-part shape
+    back = TraceRecorder.from_json(blob)
+    assert back.tier_events == srv.trace.tier_events
+    assert len(back.steps) == len(srv.trace.steps)
+    assert back.tier_transfer_stats() == srv.trace.tier_transfer_stats()
+    kinds = set(back.tier_transfer_stats())
+    assert any(k.startswith("kv:hbm->") for k in kinds)   # parks recorded
+
+
+def test_trace_json_stays_legacy_without_tiers(mixtral_setup):
+    cfg, params = mixtral_setup
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=4, policy="lru",
+                                  max_batch=1, cache_len=32)
+    srv.submit([1, 2, 3], max_new=4)
+    srv.run()
+    data = json.loads(srv.trace.to_json())
+    assert isinstance(data, list)                   # bit-compatible shape
+    assert TraceRecorder.from_json(srv.trace.to_json()).steps == \
+        srv.trace.steps
+
+
+def test_miss_tier_counts_sees_disk(mixtral_setup):
+    cfg, params = mixtral_setup
+    eb = 3 * cfg.d_model * cfg.expert_d_ff * 4
+    srv = _tiered_server(params, cfg, slots=2, blocks=8,
+                         host_budget_bytes=4 * cfg.num_layers * eb)
+    srv.submit([1, 2, 3, 4, 5], max_new=10)
+    srv.run()
+    counts = srv.trace.miss_tier_counts()
+    assert counts.get("disk", 0) > 0 and counts.get("host", 0) > 0
+    total = sum(len(s.misses) for s in srv.trace.steps)
+    assert sum(counts.values()) == total

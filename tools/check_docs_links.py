@@ -1,0 +1,70 @@
+"""CI gate: relative links in README.md and docs/*.md must resolve.
+
+Scans every markdown link ``[text](target)`` and fails when a
+repo-relative target does not exist on disk. Out of scope, by design:
+
+- absolute URLs (``http(s)://``, ``mailto:``) — no network in CI;
+- same-file anchors (``#section``) and anchor fragments on file links
+  (the file must exist; heading drift is not checked);
+- targets that escape the repo root (e.g. the README's
+  ``../../actions/…`` CI badge) — those are GitHub *site*-relative
+  routes, not files.
+
+Inline code spans are stripped first so documented link SYNTAX
+(like the examples in docs/traces.md) is not treated as a link.
+
+Run:  python tools/check_docs_links.py
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from glob import glob
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+CODE = re.compile(r"```.*?```|`[^`\n]*`", re.DOTALL)
+
+
+def check_file(path: str) -> list:
+    with open(path) as f:
+        text = CODE.sub("", f.read())
+    bad = []
+    for target in LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        resolved = os.path.normpath(
+            os.path.join(os.path.dirname(path), rel))
+        if not os.path.abspath(resolved).startswith(REPO_ROOT + os.sep):
+            continue  # escapes the repo: a site-relative route
+        if not os.path.exists(resolved):
+            bad.append((target, resolved))
+    return bad
+
+
+def main() -> int:
+    files = [os.path.join(REPO_ROOT, "README.md")] + \
+        sorted(glob(os.path.join(REPO_ROOT, "docs", "*.md")))
+    failed = False
+    for path in files:
+        rel = os.path.relpath(path, REPO_ROOT)
+        bad = check_file(path)
+        for target, resolved in bad:
+            print(f"FAIL {rel}: broken link '{target}' "
+                  f"(no such file: {os.path.relpath(resolved, REPO_ROOT)})")
+            failed = True
+        if not bad:
+            print(f"ok   {rel}")
+    if failed:
+        return 1
+    print("OK: every relative link resolves")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
