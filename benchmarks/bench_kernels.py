@@ -34,6 +34,23 @@ def run() -> None:
     flops = 2 * 3 * E * C * d * F
     emit("kernel/moe_gemm_xla_cpu", us, f"gflops={flops / us / 1e3:.1f}")
 
+    # grouped-GEMM impl comparison on a decode-shaped problem: ref
+    # (einsum oracle) vs xla (batched dot) vs pallas interpret mode,
+    # wall time + worst-case deviation from the oracle (PR 9 hot path)
+    Eg, Cg, dg, Fg = 4, 128, 256, 512
+    xg = jnp.asarray(rng.normal(size=(Eg, Cg, dg)) * 0.5, jnp.float32)
+    g1 = jnp.asarray(rng.normal(size=(Eg, dg, Fg)) * 0.05, jnp.float32)
+    g3 = jnp.asarray(rng.normal(size=(Eg, dg, Fg)) * 0.05, jnp.float32)
+    g2 = jnp.asarray(rng.normal(size=(Eg, Fg, dg)) * 0.05, jnp.float32)
+    want = np.asarray(ops.moe_ffn(xg, g1, g3, g2, impl="ref"))
+    for impl in ("ref", "xla", "pallas_interpret"):
+        us = timeit(lambda: ops.moe_ffn(xg, g1, g3, g2, impl=impl),
+                    iters=1 if impl == "pallas_interpret" else 5)
+        diff = float(np.max(np.abs(
+            np.asarray(ops.moe_ffn(xg, g1, g3, g2, impl=impl)) - want)))
+        emit(f"kernel/moe_gemm_grouped_{impl}", us,
+             f"E{Eg}xC{Cg}xd{dg}xF{Fg} max_abs_diff={diff:.2e}")
+
     # VMEM working set of the production BlockSpec (bc=128, bf=512, d=4096)
     bc, bf, dd = 128, 512, 4096
     vmem = (bc * dd * 2 + 2 * dd * bf * 2 + bf * dd * 2 + bc * dd * 4)

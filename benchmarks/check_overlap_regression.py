@@ -1,0 +1,101 @@
+"""CI gate: the executed overlap pipeline must keep beating the
+synchronous path, vs the committed baseline.
+
+``bench_overlap.run`` writes fresh metrics to
+``benchmarks/results/BENCH_overlap.json``; the committed baseline lives
+at the repo root as ``BENCH_overlap.json``. This script fails when:
+
+- in any (config, prefetch) cell the overlap run stops strictly
+  reducing the exposed-transfer fraction vs synchronous (which is 1.0
+  by construction), stops winning on simulated time, or takes more
+  decode steps (the pipeline must stay functionally transparent);
+- a cell's overlap ``exposed_frac`` regresses by more than
+  ``--frac-tolerance`` (relative) over the committed baseline —
+  transfers that used to hide under compute are exposed again;
+- a cell's steps-to-drain drifts from the baseline by more than
+  ``--step-tolerance`` (absolute) — the workload itself changed.
+
+All numbers come from the simulated clock over fixed seeds, so they
+are machine-stable. When the sweep changes shape intentionally:
+
+    PYTHONPATH=src python -m benchmarks.run --only overlap
+    cp benchmarks/results/BENCH_overlap.json BENCH_overlap.json
+
+Run:  PYTHONPATH=src python -m benchmarks.check_overlap_regression
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BASELINE = os.path.join(REPO_ROOT, "BENCH_overlap.json")
+CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "BENCH_overlap.json")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", default=BASELINE)
+    ap.add_argument("--current", default=CURRENT)
+    ap.add_argument("--frac-tolerance", type=float, default=0.20,
+                    help="allowed relative exposed_frac regression")
+    ap.add_argument("--step-tolerance", type=int, default=2,
+                    help="allowed absolute steps-to-drain drift")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        base = json.load(f)["cells"]
+    with open(args.current) as f:
+        cur = json.load(f)["cells"]
+
+    failed = []
+
+    def check(name, ok, detail):
+        print(f"{'ok ' if ok else 'FAIL'} {name:40s} {detail}")
+        if not ok:
+            failed.append(name)
+
+    pairs = sorted({k.rsplit("/", 1)[0] for k in base
+                    if k.endswith("/overlap")})
+    for pair in pairs:
+        over, sync = cur.get(f"{pair}/overlap"), cur.get(f"{pair}/sync")
+        if not (over and sync):
+            check(f"{pair}/present", False, "cells missing from fresh run")
+            continue
+        check(f"{pair}/hides_transfers",
+              over["exposed_frac"] < sync["exposed_frac"],
+              f"overlap={over['exposed_frac']:.3f} "
+              f"sync={sync['exposed_frac']:.3f}")
+        check(f"{pair}/wins_sim_time",
+              over["sim_time_s"] < sync["sim_time_s"],
+              f"overlap={over['sim_time_s'] * 1e6:.1f}us "
+              f"sync={sync['sim_time_s'] * 1e6:.1f}us")
+        check(f"{pair}/transparent_steps",
+              over["steps"] <= sync["steps"],
+              f"overlap={over['steps']} sync={sync['steps']}")
+        b = base[f"{pair}/overlap"]["exposed_frac"]
+        ceiling = min(1.0, b * (1 + args.frac_tolerance))
+        check(f"{pair}/frac_vs_baseline",
+              over["exposed_frac"] <= ceiling,
+              f"base={b:.3f} now={over['exposed_frac']:.3f} "
+              f"ceiling={ceiling:.3f}")
+        for mode in ("overlap", "sync"):
+            bs = base[f"{pair}/{mode}"]["steps"]
+            got = cur[f"{pair}/{mode}"]["steps"]
+            check(f"{pair}/{mode}_steps",
+                  abs(got - bs) <= args.step_tolerance,
+                  f"base={bs} now={got}")
+
+    if failed:
+        print(f"FAIL: overlap bench regressed in {len(failed)} check(s): "
+              f"{', '.join(failed)}")
+        return 1
+    print("OK: overlap pipeline still beats synchronous in every cell")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,12 +11,14 @@ from repro.core.paged_kv import PagedKVCache
 from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
                                  SpeculativePrefetcher)
 from repro.core.trace import StepTrace, TierEvent, TraceRecorder
+from repro.core.transfer_engine import Transfer, TransferEngine
 
 __all__ = [
     "POLICIES", "make_policy", "CostModel", "HardwareProfile", "ModelBytes",
     "ExpertCache", "ExpertStore", "LearnedModel", "LearnedPolicy",
     "LearnedPredictor", "OffloadEngine", "MarkovPredictor",
     "PagedKVCache", "SpeculativePrefetcher", "StepTrace", "SwapQueue",
-    "TierEvent", "TieredMemoryManager", "TraceRecorder",
-    "evaluate_recall", "train_from_trace", "plan_hbm_split",
+    "TierEvent", "TieredMemoryManager", "TraceRecorder", "Transfer",
+    "TransferEngine", "evaluate_recall", "train_from_trace",
+    "plan_hbm_split",
 ]

@@ -190,6 +190,17 @@ class CostModel:
         prefetch_hits: correct guesses (they remove a future demand miss;
         callers pass *post-prefetch* miss counts so this only matters for
         the overlap window accounting).
+
+        The ``overlap`` branch here is ANALYTIC — a closed-form average
+        that credits each speculative transfer one layer's compute
+        window. Since PR 9 the engine's ``overlap=True`` mode no longer
+        uses it for the clock: it executes transfers on the
+        ``TransferEngine`` timeline and exposes the real per-layer
+        ``max(0, dma_done - compute_done)`` stalls, against which this
+        formula is validated (as an upper bound of the synchronous
+        path) in tests and ``benchmarks/bench_overlap.py``. The formula
+        stays because trace analyses and the synchronous path's
+        ``step_latency`` depend on its exact arithmetic.
         """
         t_comp = self.layer_compute_time(batch)
         t_demand = misses_per_layer * self.expert_transfer_time()

@@ -44,6 +44,8 @@ from __future__ import annotations
 
 from typing import Dict, List, Optional, Tuple
 
+from repro.core.transfer_engine import Transfer, TransferEngine
+
 Key = Tuple[int, int]  # (layer, expert_id)
 
 
@@ -72,7 +74,7 @@ def plan_hbm_split(hbm_bytes: int, *, num_layers: int, num_experts: int,
     return slots, blocks
 
 
-class SwapQueue:
+class SwapQueue(TransferEngine):
     """Double-buffered asynchronous transfer queue (simulated clock).
 
     ``lanes`` (default 2 — classic double buffering) transfers may be
@@ -80,38 +82,26 @@ class SwapQueue:
     earliest-free lane. ``submit`` returns the completion time; the
     queue never blocks by itself — callers that need a transfer's
     result compare ``ready`` against *now* and account the stall.
+
+    Since PR 9 this is a thin facade over ``TransferEngine`` (the
+    general copy-engine model the decode overlap pipeline shares): all
+    demotion traffic rides the same-priority prefetch class, so the
+    lane schedule is byte-identical to the PR 8 queue — earliest-free
+    lane, ``start = max(now, lane_free)``.
     """
 
-    def __init__(self, lanes: int = 2):
-        assert lanes >= 1
-        self.lane_free = [0.0] * lanes
-        self.inflight: List[dict] = []   # records with a "ready" time
-        self.submitted = 0
-        self.completed = 0
-
-    def submit(self, now: float, duration: float, **info) -> float:
+    def submit(self, now: float, duration: float, **info) -> float:  # type: ignore[override]
         """Schedule a transfer of ``duration`` seconds starting at the
         earliest free lane (>= now). Returns its completion time."""
-        lane = min(range(len(self.lane_free)), key=lambda i: self.lane_free[i])
-        start = max(now, self.lane_free[lane])
-        ready = start + duration
-        self.lane_free[lane] = ready
-        self.inflight.append(dict(info, ready=ready))
-        self.submitted += 1
-        return ready
+        kind = info.pop("kind", "swap")
+        key = info.pop("key", None)
+        t = TransferEngine.submit(self, now, duration, key=key, kind=kind,
+                                  **info)
+        return t.done
 
-    def drain(self, now: float) -> List[dict]:
+    def drain(self, now: float) -> List[Transfer]:
         """Retire (and return) every transfer complete by ``now``."""
-        done = [r for r in self.inflight if r["ready"] <= now]
-        self.inflight = [r for r in self.inflight if r["ready"] > now]
-        self.completed += len(done)
-        return done
-
-    def pending(self, now: float, **match) -> List[dict]:
-        """In-flight transfers not yet complete at ``now`` whose fields
-        match ``match`` (e.g. ``kind="kv"``)."""
-        return [r for r in self.inflight if r["ready"] > now
-                and all(r.get(k) == v for k, v in match.items())]
+        return self.advance(now)
 
 
 class TieredMemoryManager:
@@ -368,7 +358,8 @@ class TieredMemoryManager:
         subtracts these from the free count (the watermark check
         consults the arbiter)."""
         t = self.now if now is None else now
-        return sum(r["blocks"] for r in self.queue.pending(t, kind="kv"))
+        return sum(r.info.get("blocks", 0)
+                   for r in self.queue.pending(t, kind="kv"))
 
     def note_block_claims(self, free_blocks_now: int,
                           now: Optional[float] = None) -> float:
@@ -384,12 +375,12 @@ class TieredMemoryManager:
             return 0.0
         until = t
         for r in sorted(self.queue.pending(t, kind="kv"),
-                        key=lambda r: r["ready"]):
+                        key=lambda r: r.done):
             if deficit <= 0:
                 break
-            if r["blocks"] > 0:
-                until = max(until, r["ready"])
-                deficit -= r["blocks"]
+            if r.info.get("blocks", 0) > 0:
+                until = max(until, r.done)
+                deficit -= r.info["blocks"]
         self._add_stall(until - t)
         return until - t
 

@@ -27,6 +27,8 @@ from repro.core.expert_store import ExpertStore
 from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
                                  SpeculativePrefetcher)
 from repro.core.trace import TraceRecorder
+from repro.core.transfer_engine import TransferEngine
+from repro.kernels import ops
 from repro.models import transformer as tf
 from repro.models.layers import rms_norm, sinusoidal_positions
 
@@ -35,13 +37,62 @@ def _layer_slice(tree, i):
     return jax.tree.map(lambda x: x[i], tree)
 
 
-@functools.partial(jax.jit, static_argnames=())
-def _expert_ffn(xf, w1, w3, w2, comb):
-    """xf [B,d]; w* [U,d,ff]/[U,ff,d]; comb [B,U] -> y [B,d]."""
-    h = jnp.einsum("bd,udf->buf", xf, w1)
-    g = jnp.einsum("bd,udf->buf", xf, w3)
-    out = jnp.einsum("buf,ufd->bud", jax.nn.silu(h) * g, w2)
-    return jnp.einsum("bud,bu->bd", out.astype(jnp.float32), comb)
+@functools.partial(jax.jit, static_argnames=("impl",))
+def _grouped_ffn(xf, w1, w3, w2, comb, *, impl: str = "xla"):
+    """xf [B,d]; w* [U,d,ff]/[U,ff,d]; comb [B,U] -> y [B,d].
+
+    The resident-expert FFN goes through the grouped SwiGLU kernel
+    (``ops.moe_ffn``: Pallas on TPU, batched-dot XLA or the einsum
+    oracle elsewhere — ``impl`` selects). Capacity dispatch is the
+    full decode batch: x broadcasts to [U,B,d] (decode batches are
+    <= 8 rows, so every expert computing every row is cheaper than a
+    gather), and the combine matrix mixes each row's top-k outputs.
+    """
+    x_e = jnp.broadcast_to(xf[None], (w1.shape[0],) + xf.shape)
+    out = ops.moe_ffn(x_e, w1, w3, w2, impl=impl)
+    return jnp.einsum("ubd,bu->bd", out, comb)
+
+
+def _batch_union(ids: np.ndarray, probs: np.ndarray,
+                 active: Sequence[bool], num_experts: int
+                 ) -> Tuple[List[int], np.ndarray]:
+    """Union of the ACTIVE rows' experts, most-weighted first.
+
+    Returns ``(union, w)`` where ``w`` [E] float64 holds each expert's
+    summed gate weight. Pure-numpy replacement for the PR 1 Python
+    loops, bit-identical with them (regression-tested): weights
+    accumulate in float64 in row-major (b, j) order — the loop's
+    ``weight_by_e[e] += float(probs[b, j])`` — and weight ties break
+    by FIRST OCCURRENCE in that scan order, which is exactly the
+    stable-sort-over-dict-insertion-order the loop relied on.
+    """
+    act = np.asarray(active, bool)
+    flat = ids[act].ravel()
+    w = np.zeros(num_experts, np.float64)
+    np.add.at(w, flat, probs[act].ravel().astype(np.float64))
+    first = np.full(num_experts, flat.size, np.int64)
+    np.minimum.at(first, flat, np.arange(flat.size))
+    present = np.flatnonzero(first < flat.size)
+    order = np.lexsort((first[present], -w[present]))
+    return [int(e) for e in present[order]], w
+
+
+def _combine_matrix(chunk: Sequence[int], ids: np.ndarray, probs: np.ndarray,
+                    active: Sequence[bool], num_experts: int) -> np.ndarray:
+    """[B, len(chunk)] float32 combine weights: row b mixes chunk
+    column j with the gate prob of that expert if row b routed to it
+    (0 otherwise; inactive rows are all-zero). Numpy scatter in the
+    same row-major order as the PR 1 loop — bit-identical."""
+    B = ids.shape[0]
+    act = np.asarray(active, bool)
+    col = np.full(num_experts, -1, np.int64)
+    col[np.asarray(chunk, np.int64)] = np.arange(len(chunk))
+    cols = col[ids]                                   # [B, k]
+    m = (cols >= 0) & act[:, None]
+    rows = np.broadcast_to(np.arange(B)[:, None], cols.shape)
+    comb = np.zeros((B, len(chunk)), np.float32)
+    np.add.at(comb, (rows[m], cols[m]), probs[m])
+    return comb
 
 
 class OffloadEngine:
@@ -55,11 +106,13 @@ class OffloadEngine:
                  learned_model=None,   # repro.core.learned.LearnedModel
                  hw: Optional[HardwareProfile] = None,
                  overlap: bool = False,
+                 ffn_impl: str = "xla",  # "xla"|"ref"|"pallas"|"pallas_interpret"
                  trace: Optional[TraceRecorder] = None,
                  tiers=None,   # repro.core.memory_tiers.TieredMemoryManager
                  seed: int = 0):
         assert cfg.is_moe, "offloading targets MoE experts"
         assert prefetch in (None, "spec", "markov", "learned")
+        assert ffn_impl in ("xla", "ref", "pallas", "pallas_interpret")
         self.params = params
         self.cfg = cfg
         if isinstance(cache_slots, int):
@@ -91,6 +144,15 @@ class OffloadEngine:
         mb = ModelBytes(**{**mb.__dict__, "expert_bytes": eb})
         self.cost = CostModel(hw or HardwareProfile.a6000_pcie4(), mb,
                               overlap=overlap)
+        self.overlap = overlap
+        self.ffn_impl = ffn_impl
+        # host->device expert copy engine (the executed overlap
+        # pipeline's clock; idle when overlap=False — the synchronous
+        # path keeps the analytic step_latency accounting exactly)
+        self.xfer = TransferEngine(lanes=2)
+        self._clock = 0.0                 # per-step pipeline clock
+        self.transfer_busy_s = 0.0        # DMA seconds issued
+        self.exposed_transfer_s = 0.0     # DMA seconds the clock saw
         self.sim_time = 0.0
         self.tokens_done = 0
         self._steps_done = 0
@@ -163,6 +225,20 @@ class OffloadEngine:
         probs = top / top.sum(axis=-1, keepdims=True)
         return ids, probs
 
+    def _issue_transfers(self, layer: int, eids: Sequence[int], *,
+                         demand: bool) -> None:
+        """Submit host->device expert copies to the copy engine at the
+        current pipeline clock (overlap mode only). Demand copies may
+        displace queued prefetches; prefetches queue behind the lane
+        tails. Keyed ``(layer, expert)`` so the consuming layer can ask
+        when its working set is actually resident."""
+        dur = self.cost.expert_transfer_time()
+        nb = self.cost.mb.expert_bytes
+        for e in eids:
+            self.xfer.submit(self._clock, dur, key=(layer, int(e)),
+                             kind="expert", nbytes=nb, demand=demand)
+            self.transfer_busy_s += dur
+
     def _moe_offloaded(self, p_l, layer: int, h,
                        pending_guess: Tuple[int, ...],
                        pending_moved: Tuple[int, ...],
@@ -176,6 +252,15 @@ class OffloadEngine:
         exactly zero, so active rows' outputs are independent of batch
         composition. The trace records the union access plus per-request
         attribution for each active row.
+
+        With ``overlap=True`` this is one stage of the executed
+        software pipeline: demand misses are ISSUED to the copy engine
+        at the layer's start, compute proceeds immediately on the
+        (functionally already-installed) union, and the clock stalls
+        only for transfers still in flight when the FLOPs finish —
+        ``stall = max(0, dma_done - compute_done)``, recorded per layer
+        in the trace. The synchronous path exposes the full transfer
+        time, exactly as ``CostModel.step_latency`` prices it.
         """
         cfg = self.cfg
         x = rms_norm(h, p_l["ln2"], cfg.norm_eps)
@@ -183,15 +268,8 @@ class OffloadEngine:
         B = ids.shape[0]
 
         # union of needed experts over ACTIVE rows, most-weighted first
-        # (deterministic; insertion order breaks weight ties)
-        weight_by_e: Dict[int, float] = {}
-        for b in range(B):
-            if not active[b]:
-                continue
-            for j in range(ids.shape[1]):
-                e = int(ids[b, j])
-                weight_by_e[e] = weight_by_e.get(e, 0.0) + float(probs[b, j])
-        union = sorted(weight_by_e, key=lambda e: -weight_by_e[e])
+        # (deterministic; first-occurrence order breaks weight ties)
+        union, weight_of = _batch_union(ids, probs, active, cfg.num_experts)
 
         cache = self.caches[layer]
         cache_before = cache.cached_ids()
@@ -211,18 +289,36 @@ class OffloadEngine:
             evicted += e_
             miss_tiers += list(cache.last_miss_tiers)
             w = cache.gather(chunk)
-            comb = np.zeros((B, len(chunk)), np.float32)
-            col = {e: i for i, e in enumerate(chunk)}
-            for b in range(B):
-                if not active[b]:
-                    continue
-                for j in range(ids.shape[1]):
-                    e = int(ids[b, j])
-                    if e in col:
-                        comb[b, col[e]] += probs[b, j]
-            y = y + _expert_ffn(x[:, 0, :], w["w1"], w["w3"], w["w2"],
-                                jnp.asarray(comb))
+            comb = _combine_matrix(chunk, ids, probs, active,
+                                   cfg.num_experts)
+            y = y + _grouped_ffn(x[:, 0, :], w["w1"], w["w3"], w["w2"],
+                                 jnp.asarray(comb), impl=self.ffn_impl)
         h = h + y[:, None, :].astype(h.dtype)
+
+        # --- simulated pipeline clock for this layer ------------------
+        n_active = sum(1 for a in active if a)
+        t_comp = self.cost.layer_compute_time(n_active)
+        if self.overlap:
+            # demand misses hit the copy engine's priority class at the
+            # layer's start (routing readback); already-issued
+            # prefetches for this layer may still be in flight — both
+            # only cost what outlives the layer's compute
+            self._issue_transfers(layer, misses, demand=True)
+            compute_done = self._clock + t_comp
+            keys = [(layer, e) for e in union]
+            stall_s, blockers = self.xfer.stall_until(keys, compute_done)
+            self._clock = compute_done + stall_s
+            inflight = tuple(sorted(int(k[1]) for k in blockers))
+        else:
+            # synchronous: every transfer of this layer is exposed on
+            # the clock (the analytic step_latency accounting, sliced
+            # per layer; the step's sim_time advance stays the exact
+            # step_latency formula — byte-identical with pre-PR 9)
+            stall_s = ((len(misses) + len(pending_moved))
+                       * self.cost.expert_transfer_time())
+            self.transfer_busy_s += stall_s
+            inflight = ()
+        self.exposed_transfer_s += stall_s
         if "shared" in p_l["moe"]:
             s = p_l["moe"]["shared"]
             xs = x
@@ -242,7 +338,7 @@ class OffloadEngine:
         self.trace.record(
             prompt_id=pid, token_idx=tok, layer=layer,
             activated=acts,
-            gate_weights=tuple(float(weight_by_e[e]) for e in union),
+            gate_weights=tuple(float(weight_of[e]) for e in union),
             cache_before=cache_before, cache_after=cache.cached_ids(),
             hits=tuple(hits), misses=tuple(misses), evicted=tuple(evicted),
             spec_guess=tuple(pending_guess), prefetched=tuple(pending_moved),
@@ -250,7 +346,8 @@ class OffloadEngine:
             request_activated=req_act, engine_step=self._steps_done,
             # tier attribution only when an arbiter is attached, so
             # pre-tiering traces stay byte-identical
-            miss_tiers=(tuple(miss_tiers) if self.tiers is not None else ()))
+            miss_tiers=(tuple(miss_tiers) if self.tiers is not None else ()),
+            stall_s=stall_s, inflight=inflight)
         return h, acts, len(misses)
 
     # ------------------------------------------------------------------
@@ -312,6 +409,9 @@ class OffloadEngine:
         step_misses = 0
         step_prefetch = 0
         act_rows = np.asarray([b for b in range(B) if active[b]], np.int32)
+        # the executed pipeline clock starts where the last step ended;
+        # per-layer stages advance it by compute + exposed stall
+        self._clock = self.sim_time
 
         for l in range(cfg.num_layers):
             p_l = _layer_slice(params["layers"], l)
@@ -330,6 +430,10 @@ class OffloadEngine:
                 moved = self.caches[l + 1].prefetch(guess)
                 step_prefetch += len(moved)
                 pending[l + 1] = (guess, tuple(moved))
+                if self.overlap:
+                    # issued before layer l's MoE computes: the copy
+                    # has layer l's compute window to hide under
+                    self._issue_transfers(l + 1, moved, demand=False)
 
             pg, pm = pending.get(l, ((), ()))
             h, acts, misses = self._moe_offloaded(
@@ -355,16 +459,30 @@ class OffloadEngine:
                     moved = self.caches[l + 1].prefetch(guess)
                     step_prefetch += len(moved)
                     pending[l + 1] = (guess, tuple(moved))
+                    if self.overlap:
+                        # predicted AFTER layer l's MoE (the clock has
+                        # advanced past it): the copy hides under layer
+                        # l+1's attention + FFN compute
+                        self._issue_transfers(l + 1, moved, demand=False)
             self._prev_acts[l] = acts
 
         logits = tf.logits_from_hidden(params, cfg, h)[:, 0]
 
         # simulated clock: one step serves n_active tokens; misses are
         # already batch-union counts (amortization is emergent)
-        self.sim_time += self.cost.step_latency(
-            step_misses / cfg.num_layers,
-            prefetch_per_layer=step_prefetch / cfg.num_layers,
-            batch=n_active)
+        if self.overlap:
+            # executed pipeline: per-layer stages already advanced the
+            # clock by compute + exposed stall; transfers that finished
+            # under compute cost nothing (the analytic step_latency
+            # formula is only the synchronous upper bound — validated
+            # against this timeline in tests and bench_overlap)
+            self.sim_time = self._clock
+            self.xfer.advance(self.sim_time)
+        else:
+            self.sim_time += self.cost.step_latency(
+                step_misses / cfg.num_layers,
+                prefetch_per_layer=step_prefetch / cfg.num_layers,
+                batch=n_active)
         if self.tiers is not None:
             # tier stalls (disk-resident demand fetches, in-flight
             # demotion waits) land on top of the host-link pricing
@@ -468,6 +586,15 @@ class OffloadEngine:
             "spec_precision": sp, "spec_recall": sr,
             "bytes_transferred": sum(c.bytes_transferred for c in self.caches),
             "decode_steps": self._steps_done,
+            # overlap pipeline accounting: DMA seconds issued vs the
+            # fraction the simulated clock actually saw (== 1.0 on the
+            # synchronous path, < 1.0 once transfers hide under compute)
+            "transfer_busy_s": self.transfer_busy_s,
+            "exposed_transfer_s": self.exposed_transfer_s,
+            "exposed_transfer_frac": (self.exposed_transfer_s
+                                      / self.transfer_busy_s
+                                      if self.transfer_busy_s else 0.0),
+            "dma_preempted": self.xfer.preempted,
             "sim_time_s": self.sim_time,
             "sim_tokens_per_s": self.tokens_done / self.sim_time
             if self.sim_time else 0.0,

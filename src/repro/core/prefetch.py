@@ -42,7 +42,8 @@ class SpeculativePrefetcher:
         x = rms_norm(h_after_attn, next_ln_w, self.cfg.norm_eps)
         logits = np.asarray((x.astype(jnp.float32) @ next_router)[:, 0, :])
         ids = np.argsort(-logits, axis=-1)[:, :self.k]  # [B, k]
-        return tuple(sorted({int(e) for row in ids for e in row}))
+        # np.unique == sorted set union (vectorized over the batch)
+        return tuple(int(e) for e in np.unique(ids))
 
 
 class MarkovPredictor:

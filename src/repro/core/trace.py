@@ -39,6 +39,17 @@ class StepTrace:
     # with ``misses``; empty when no tier manager is attached (every
     # fetch then comes from the host ExpertStore)
     miss_tiers: Tuple[str, ...] = ()
+    # --- overlap pipeline accounting (PR 9) ---------------------------
+    # seconds of transfer time this layer EXPOSED on the simulated
+    # clock: under the executed overlap pipeline this is
+    # max(0, dma_done - compute_done) (only the DMA tail sticking out
+    # past the layer's compute), under the synchronous path it is the
+    # full demand+prefetch transfer time (nothing hides)
+    stall_s: float = 0.0
+    # experts of this layer's union whose host->device copy was still
+    # in flight when the layer's compute finished — the stall causers;
+    # always empty on the synchronous path
+    inflight: Tuple[int, ...] = ()
     # global engine step (one per decode_tokens call): aligns the layers
     # of one token pass so the learned predictor's same-token
     # previous-layer transition feature survives batched/interleaved
@@ -204,6 +215,15 @@ class TraceRecorder:
 
     def transfers(self) -> int:
         return sum(len(s.misses) + len(s.prefetched) for s in self.steps)
+
+    def exposed_stall_s(self, *, layer: Optional[int] = None) -> float:
+        """Total transfer seconds the recorded steps exposed on the
+        simulated clock (``StepTrace.stall_s`` summed) — the overlap
+        pipeline's headline metric. Synchronous-path traces expose the
+        full transfer time; executed-overlap traces only the DMA tails
+        that outlived their layer's compute."""
+        return sum(s.stall_s for s in self.steps
+                   if layer is None or s.layer == layer)
 
     # ------------------------------------------------------ tier events
     def tier_transfer_stats(self) -> Dict[str, Dict[str, int]]:

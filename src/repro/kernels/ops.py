@@ -3,7 +3,8 @@ MXU-friendly padding, GQA broadcast, and an ``impl`` switch:
 
   impl="pallas"            — real TPU lowering (target hardware)
   impl="pallas_interpret"  — kernel body interpreted on CPU (tests)
-  impl="xla"               — the jnp oracle (default on CPU)
+  impl="xla"               — batched-dot XLA lowering (default on CPU)
+  impl="ref"               — the unfused jnp oracle (moe_ffn only)
 """
 from __future__ import annotations
 
@@ -29,24 +30,60 @@ def _pad_to(x, axis: int, mult: int):
     return jnp.pad(x, widths), n
 
 
+def _moe_ffn_xla(x_e, w1, w3, w2):
+    """Batched-dot XLA lowering of the grouped SwiGLU FFN (one fused
+    dot_general chain per expert via vmap) — the production CPU/GPU
+    fallback, distinct from the unfused einsum oracle in ``ref``."""
+    def one(x, a, b, c):
+        x = x.astype(jnp.float32)
+        h = x @ a.astype(jnp.float32)
+        g = x @ b.astype(jnp.float32)
+        return (jax.nn.silu(h) * g) @ c.astype(jnp.float32)
+    return jax.vmap(one)(x_e, w1, w3, w2)
+
+
+def _aligned_block(n: int, cap: int, mult: int) -> int:
+    """Largest multiple of ``mult`` that is <= ``cap`` and divides
+    ``n`` rounded up to ``mult`` (the padded extent). ``mult`` itself
+    always qualifies, so the search terminates."""
+    n_p = n + (-n) % mult
+    for b in range(min(cap, n_p) - min(cap, n_p) % mult, 0, -mult):
+        if n_p % b == 0:
+            return b
+    return mult
+
+
 @functools.partial(jax.jit, static_argnames=("impl", "block_c", "block_f"))
-def moe_ffn(x_e, w1, w3, w2, *, impl: str = "xla", block_c: int = 128,
-            block_f: int = 512):
-    """Grouped expert SwiGLU FFN. x_e [E,C,d] -> [E,C,d] fp32."""
-    if impl == "xla":
+def moe_ffn(x_e, w1, w3, w2, *, impl: str = "xla",
+            block_c: int = None, block_f: int = None):
+    """Grouped expert SwiGLU FFN. x_e [E,C,d] -> [E,C,d] fp32.
+
+    The pallas path pads every GEMM extent and slices the result back,
+    so ragged shapes (``C % block_c != 0``, ``F % block_f != 0``, odd
+    ``d``) are exact — parity-tested vs xla/ref. With the default
+    ``block_c=block_f=None`` the blocks are auto-chosen TPU-tile
+    aligned (fp32 (8, 128) tiles: sublane dim a multiple of 8, lane
+    dim a multiple of 128, ``d`` padded to 128); explicitly passed
+    blocks are honored as-is (interpret-mode testing knob — real-TPU
+    lane alignment is then the caller's responsibility).
+    """
+    if impl == "ref":
         return ref.moe_gemm_ref(x_e, w1, w3, w2)
+    if impl == "xla":
+        return _moe_ffn_xla(x_e, w1, w3, w2)
     interpret = impl == "pallas_interpret"
     E, C, d = x_e.shape
     F = w1.shape[-1]
-    bc = min(block_c, max(8, C))
-    bf = min(block_f, F)
+    bc = block_c if block_c is not None else _aligned_block(C, 128, 8)
+    bf = block_f if block_f is not None else _aligned_block(F, 512, 128)
     x_p, C0 = _pad_to(x_e, 1, bc)
-    w1_p, F0 = _pad_to(w1, 2, bf)
-    w3_p, _ = _pad_to(w3, 2, bf)
-    w2_p, _ = _pad_to(w2, 1, bf)
+    x_p, _ = _pad_to(x_p, 2, 128)           # MXU contraction dim
+    w1_p, _ = _pad_to(_pad_to(w1, 1, 128)[0], 2, bf)
+    w3_p, _ = _pad_to(_pad_to(w3, 1, 128)[0], 2, bf)
+    w2_p, _ = _pad_to(_pad_to(w2, 2, 128)[0], 1, bf)
     out = moe_gemm_pallas(x_p, w1_p, w3_p, w2_p, block_c=bc, block_f=bf,
                           interpret=interpret)
-    return out[:, :C0, :]
+    return out[:, :C0, :d]
 
 
 @functools.partial(jax.jit, static_argnames=("impl", "block_h"))

@@ -106,6 +106,7 @@ class ContinuousOffloadServer:
                  policy_kw: Optional[dict] = None, learned_model=None,
                  prefetch: Optional[str] = None, quant: str = "none",
                  hw: Optional[HardwareProfile] = None, overlap: bool = False,
+                 ffn_impl: str = "xla",
                  eos_id: Optional[int] = None, temperature: float = 0.0,
                  top_p: float = 1.0, seed: int = 0,
                  kv_layout: str = "paged", kv_block_size: int = 16,
@@ -173,7 +174,7 @@ class ContinuousOffloadServer:
             params, cfg, cache_slots=cache_slots, policy=policy,
             policy_kw=policy_kw, learned_model=learned_model,
             prefetch=prefetch, quant=quant, hw=hw, overlap=overlap,
-            trace=self.trace)
+            ffn_impl=ffn_impl, trace=self.trace)
         self.kv_layout = kv_layout
         self.kv_block_size = kv_block_size
         self.kv_watermark = kv_watermark
@@ -620,6 +621,7 @@ class OffloadServer:
                  policy_kw: Optional[dict] = None, learned_model=None,
                  prefetch: Optional[str] = None, quant: str = "none",
                  hw: Optional[HardwareProfile] = None, overlap: bool = False,
+                 ffn_impl: str = "xla",
                  cache_len: int = 512, kv_layout: str = "paged",
                  kv_block_size: int = 16):
         self.cfg = cfg
@@ -627,8 +629,8 @@ class OffloadServer:
             params, cfg, cache_slots=cache_slots, max_batch=1,
             cache_len=cache_len, policy=policy, policy_kw=policy_kw,
             learned_model=learned_model, prefetch=prefetch,
-            quant=quant, hw=hw, overlap=overlap, kv_layout=kv_layout,
-            kv_block_size=kv_block_size)
+            quant=quant, hw=hw, overlap=overlap, ffn_impl=ffn_impl,
+            kv_layout=kv_layout, kv_block_size=kv_block_size)
         self.trace = self._srv.trace
         self.engine = self._srv.engine
 

@@ -38,6 +38,27 @@ def test_moe_gemm_allclose(E, C, d, F, dtype):
                                rtol=tol, atol=tol)
 
 
+@pytest.mark.parametrize("E,C,d,F", [
+    (2, 12, 130, 96),    # d and F both off the fp32 (8,128) tile grid
+    (1, 5, 64, 500),     # tiny C, ragged F
+    (2, 7, 100, 130),    # everything ragged
+    (4, 3, 200, 640),    # decode-sized C with auto blocks
+])
+def test_moe_gemm_ragged_auto_blocks(E, C, d, F):
+    """Auto-selected blocks (pad C/F/d to tile-aligned shapes, slice
+    back) must agree across all three impls on shapes no dimension of
+    which divides the defaults — the PR 9 padding fix."""
+    x = randn((E, C, d), jnp.float32, 0.5)
+    w1 = randn((E, d, F), jnp.float32, 0.05)
+    w3 = randn((E, d, F), jnp.float32, 0.05)
+    w2 = randn((E, F, d), jnp.float32, 0.05)
+    want = ref.moe_gemm_ref(x, w1, w3, w2)
+    for impl in ("xla", "pallas_interpret"):
+        got = ops.moe_ffn(x, w1, w3, w2, impl=impl)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-4, atol=1e-4, err_msg=impl)
+
+
 def test_moe_gemm_block_shape_independence():
     x = randn((2, 64, 128), jnp.float32, 0.5)
     w1 = randn((2, 128, 256), jnp.float32, 0.05)

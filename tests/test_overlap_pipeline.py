@@ -1,0 +1,200 @@
+"""Executed overlap pipeline (PR 9): the decode software pipeline that
+issues expert copies asynchronously and stalls only for in-flight
+transfers must be TOKEN-FOR-TOKEN bit-exact with the synchronous path —
+same outputs, same cache hit/miss/eviction sequence — while strictly
+reducing exposed transfer time. Also the bit-identity regression for
+the vectorized routing/combine construction vs the original Python
+loops."""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+import repro.core.offload_engine as oe
+from repro.configs import get_config, reduced
+from repro.core import OffloadEngine
+from repro.models import transformer as tf
+
+
+@pytest.fixture(scope="module")
+def mixtral_setup():
+    cfg = reduced(get_config("mixtral-8x7b"), layers=4, d_model=96, experts=8)
+    cfg = dataclasses.replace(cfg, dtype="float32", num_experts_per_tok=2)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+PROMPT = [1, 2, 3, 4, 5]
+
+# trace fields that must be identical between the overlap and sync
+# pipelines (everything functional; only the clock fields may differ)
+FUNCTIONAL_FIELDS = ("prompt_id", "token_idx", "layer", "activated",
+                     "gate_weights", "cache_before", "cache_after",
+                     "hits", "misses", "evicted", "spec_guess",
+                     "prefetched", "request_ids", "request_activated")
+
+
+def _run(cfg, params, *, overlap, prefetch, slots=4, n_new=10):
+    eng = OffloadEngine(params, cfg, cache_slots=slots, policy="lru",
+                        prefetch=prefetch, overlap=overlap)
+    toks = eng.generate(PROMPT, n_new)
+    return eng, toks
+
+
+@pytest.mark.parametrize("prefetch", [None, "spec", "markov", "learned"])
+def test_overlap_bit_exact_with_synchronous(mixtral_setup, prefetch):
+    """overlap=True changes WHEN transfers are paid, never WHAT the
+    model computes: tokens and the full functional trace (hit/miss/
+    eviction/prefetch sequences) match the synchronous run exactly."""
+    cfg, params = mixtral_setup
+    sync_eng, sync_toks = _run(cfg, params, overlap=False, prefetch=prefetch)
+    over_eng, over_toks = _run(cfg, params, overlap=True, prefetch=prefetch)
+    assert over_toks == sync_toks
+    srows, orows = sync_eng.trace.steps, over_eng.trace.steps
+    assert len(srows) == len(orows) > 0
+    for s, o in zip(srows, orows):
+        for f in FUNCTIONAL_FIELDS:
+            assert getattr(s, f) == getattr(o, f), f
+    # only the clock differs: the pipeline hides transfers under compute
+    assert over_eng.sim_time < sync_eng.sim_time
+    # conservation at the copy-engine level: everything issued retired
+    over_eng.xfer.advance(over_eng.sim_time + 1e3)
+    assert over_eng.xfer.completed == over_eng.xfer.submitted
+
+
+@pytest.mark.parametrize("prefetch", ["spec", "learned"])
+def test_overlap_reduces_exposed_transfer_time(mixtral_setup, prefetch):
+    """Acceptance: with prefetch, the executed pipeline's stall fraction
+    is strictly below synchronous (== 1.0) at no cost in steps."""
+    cfg, params = mixtral_setup
+    sync_eng, _ = _run(cfg, params, overlap=False, prefetch=prefetch)
+    over_eng, _ = _run(cfg, params, overlap=True, prefetch=prefetch)
+    ss, os_ = sync_eng.stats(), over_eng.stats()
+    assert ss["exposed_transfer_frac"] == pytest.approx(1.0)
+    assert os_["exposed_transfer_frac"] < ss["exposed_transfer_frac"]
+    assert os_["exposed_transfer_s"] < ss["exposed_transfer_s"]
+    assert os_["decode_steps"] == ss["decode_steps"]
+    assert os_["sim_time_s"] < ss["sim_time_s"]
+
+
+def test_overlap_trace_clock_fields(mixtral_setup):
+    """Per-layer stall accounting: stall_s sums to the engine's exposed
+    transfer time, inflight experts only ever appear on stalled layers,
+    and synchronous rows never report in-flight experts."""
+    cfg, params = mixtral_setup
+    eng, _ = _run(cfg, params, overlap=True, prefetch="spec")
+    rows = eng.trace.steps
+    assert sum(r.stall_s for r in rows) == pytest.approx(
+        eng.exposed_transfer_s)
+    assert eng.trace.exposed_stall_s() == pytest.approx(
+        eng.exposed_transfer_s)
+    for r in rows:
+        assert r.stall_s >= 0.0
+        if r.inflight:
+            assert r.stall_s > 0.0
+            assert set(r.inflight) <= set(r.activated)
+    sync_eng, _ = _run(cfg, params, overlap=False, prefetch="spec")
+    assert all(r.inflight == () for r in sync_eng.trace.steps)
+
+
+def test_sync_path_clock_unchanged_by_pipeline(mixtral_setup):
+    """overlap=False must keep the pre-pipeline analytic accounting
+    byte-identical: sim_time equals summing step_latency over the
+    trace, exactly as CostModel prices it."""
+    cfg, params = mixtral_setup
+    eng, _ = _run(cfg, params, overlap=False, prefetch="spec")
+    per_step = {}
+    for r in eng.trace.steps:
+        ms, pf = per_step.setdefault(r.engine_step, [0, 0])
+        per_step[r.engine_step] = [ms + len(r.misses),
+                                   pf + len(r.prefetched)]
+    want = 0.0
+    for ms, pf in per_step.values():
+        want += eng.cost.step_latency(ms / cfg.num_layers,
+                                      prefetch_per_layer=pf / cfg.num_layers,
+                                      batch=1)
+    assert eng.sim_time == want   # bitwise, not approx
+
+
+# ------------------------------------------------------------------
+# vectorized routing vs the original PR 1 Python loops
+def _batch_union_loop(ids, probs, active, num_experts):
+    weight_by_e = {}
+    for b in range(ids.shape[0]):
+        if not active[b]:
+            continue
+        for j in range(ids.shape[1]):
+            e = int(ids[b, j])
+            weight_by_e[e] = weight_by_e.get(e, 0.0) + float(probs[b, j])
+    union = sorted(weight_by_e, key=lambda e: -weight_by_e[e])
+    w = np.zeros(num_experts, np.float64)
+    for e, v in weight_by_e.items():
+        w[e] = v
+    return [int(e) for e in union], w
+
+
+def _combine_matrix_loop(chunk, ids, probs, active, num_experts):
+    col = {int(e): j for j, e in enumerate(chunk)}
+    comb = np.zeros((ids.shape[0], len(chunk)), np.float32)
+    for b in range(ids.shape[0]):
+        if not active[b]:
+            continue
+        for j in range(ids.shape[1]):
+            e = int(ids[b, j])
+            if e in col:
+                comb[b, col[e]] += probs[b, j]
+    return comb
+
+
+def test_vectorized_routing_bit_identical_to_loops(mixtral_setup,
+                                                   monkeypatch):
+    """The numpy union/combine construction must reproduce the Python
+    loops bit-for-bit — union order (weight ties break by first
+    occurrence), float64 weight accumulation, float32 combine scatter —
+    so trace rows and tokens are identical."""
+    cfg, params = mixtral_setup
+    _, vec_toks = _run(cfg, params, overlap=True, prefetch="spec")
+    vec_eng, _ = _run(cfg, params, overlap=True, prefetch="spec")
+    monkeypatch.setattr(oe, "_batch_union", _batch_union_loop)
+    monkeypatch.setattr(oe, "_combine_matrix", _combine_matrix_loop)
+    loop_eng, loop_toks = _run(cfg, params, overlap=True, prefetch="spec")
+    assert loop_toks == vec_toks
+    assert len(loop_eng.trace.steps) == len(vec_eng.trace.steps)
+    for lo, ve in zip(loop_eng.trace.steps, vec_eng.trace.steps):
+        assert lo == ve   # full dataclass equality: every field bitwise
+
+
+def test_batch_union_direct_parity():
+    """Randomized direct check incl. inactive rows, duplicate experts
+    across rows, and exact weight ties (equal probs)."""
+    rng = np.random.default_rng(7)
+    for trial in range(50):
+        B, k, E = rng.integers(1, 6), rng.integers(1, 4), rng.integers(4, 12)
+        ids = np.stack([rng.choice(E, size=k, replace=False)
+                        for _ in range(B)])
+        probs = rng.random((B, k)).astype(np.float32)
+        if trial % 3 == 0:
+            probs[:] = 0.25   # all-tied weights: order must still match
+        active = rng.random(B) < 0.8
+        if not active.any():
+            active[0] = True
+        u_v, w_v = oe._batch_union(ids, probs, active, E)
+        u_l, w_l = _batch_union_loop(ids, probs, active, E)
+        assert u_v == u_l
+        np.testing.assert_array_equal(w_v, w_l)
+        chunk = u_v[:max(1, len(u_v) // 2)]
+        c_v = oe._combine_matrix(chunk, ids, probs, active, E)
+        c_l = _combine_matrix_loop(chunk, ids, probs, active, E)
+        np.testing.assert_array_equal(c_v, c_l)
+
+
+def test_stats_expose_overlap_counters(mixtral_setup):
+    cfg, params = mixtral_setup
+    eng, _ = _run(cfg, params, overlap=True, prefetch="spec", n_new=4)
+    s = eng.stats()
+    for k in ("transfer_busy_s", "exposed_transfer_s",
+              "exposed_transfer_frac", "dma_preempted"):
+        assert k in s
+    assert 0.0 <= s["exposed_transfer_frac"] <= 1.0
+    assert s["exposed_transfer_s"] <= s["transfer_busy_s"] + 1e-12

@@ -1,0 +1,159 @@
+"""Copy-engine model (``repro.core.transfer_engine``): the properties
+the executed overlap pipeline leans on — monotone clock, demand
+priority over queued prefetches, conservation (every issued transfer
+retires exactly once), and the stall formula
+``stall == max(0, dma_done - compute_done)``."""
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container has no hypothesis: deterministic examples
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import TransferEngine
+from repro.core.memory_tiers import SwapQueue
+
+
+# ------------------------------------------------------------ basics
+def test_lane_schedule_matches_double_buffering():
+    """Same-priority transfers keep the PR 8 SwapQueue schedule:
+    earliest-free lane, start = max(now, lane tail)."""
+    eng = TransferEngine(lanes=2)
+    a = eng.submit(0.0, 1.0, key="a")
+    b = eng.submit(0.0, 1.0, key="b")
+    c = eng.submit(0.0, 1.0, key="c")
+    assert (a.done, b.done, c.done) == (1.0, 1.0, 2.0)
+    assert a.lane != b.lane and c.start == 1.0
+
+    one = TransferEngine(lanes=1)
+    dones = [one.submit(0.0, 2.0).done for _ in range(3)]
+    assert dones == [2.0, 4.0, 6.0]
+
+
+def test_transfer_timeline_ordering():
+    eng = TransferEngine(lanes=1)
+    t1 = eng.submit(0.5, 1.0, key=1)
+    t2 = eng.submit(0.5, 2.0, key=2)
+    for t in (t1, t2):
+        assert t.issue <= t.start <= t.done
+    assert t2.start == t1.done  # serialized behind the single lane
+
+
+def test_clock_monotone_under_out_of_order_advance():
+    eng = TransferEngine(lanes=2)
+    eng.submit(0.0, 1.0)
+    eng.advance(5.0)
+    eng.advance(2.0)   # stale advance must not rewind
+    assert eng.now == 5.0
+
+
+def test_demand_preempts_queued_prefetch():
+    """A demand transfer displaces prefetches that are queued on a lane
+    but have not started copying; started copies are never preempted."""
+    eng = TransferEngine(lanes=2)
+    p = [eng.submit(0.0, 1.0, key=f"p{i}") for i in range(4)]
+    # lanes hold p0,p1 (copying at t=0.5) with p2,p3 queued behind them
+    d = eng.submit(0.5, 1.0, key="d", demand=True)
+    assert d.start == 1.0 and d.done == 2.0     # behind the STARTED copy only
+    assert eng.preempted == 1                   # one queued prefetch bumped
+    bumped = next(t for t in (p[2], p[3]) if t.start == 2.0)
+    assert bumped.done == 3.0                   # requeued behind the demand
+    # without priority the demand would have queued at t=2.0
+    fifo = TransferEngine(lanes=2)
+    for i in range(4):
+        fifo.submit(0.0, 1.0, key=f"p{i}")
+    assert fifo.submit(0.5, 1.0, key="d").start == 2.0
+
+
+def test_demand_never_displaces_demand():
+    eng = TransferEngine(lanes=1)
+    d1 = eng.submit(0.0, 2.0, key=1, demand=True)
+    eng.submit(0.0, 2.0, key=2)                  # queued prefetch
+    d2 = eng.submit(0.0, 2.0, key=3, demand=True)
+    assert d2.start == d1.done                   # behind the earlier demand
+
+
+def test_stall_until_and_inflight_keys():
+    eng = TransferEngine(lanes=2)
+    eng.submit(0.0, 1.0, key=("l", 1))
+    eng.submit(0.0, 3.0, key=("l", 2))
+    # compute finishes at t=2: key 1 landed (no stall from it), key 2
+    # still in flight until t=3
+    stall, blockers = eng.stall_until([("l", 1), ("l", 2)], 2.0)
+    assert stall == 1.0 and blockers == (("l", 2),)
+    # compute finishes after every DMA: fully hidden
+    stall, blockers = eng.stall_until([("l", 1), ("l", 2)], 4.0)
+    assert stall == 0.0 and blockers == ()
+
+
+def test_swapqueue_facade_is_unchanged():
+    """The PR 8 API: submit returns the ready time, drain/pending count."""
+    q = SwapQueue(lanes=2)
+    assert q.submit(0.0, 1.0, kind="kv", rid=1, blocks=2) == 1.0
+    assert q.submit(0.0, 1.0, kind="kv", rid=2, blocks=1) == 1.0
+    assert q.submit(0.0, 1.0, kind="expert", key=(0, 3)) == 2.0
+    assert len(q.pending(0.5, kind="kv")) == 2
+    assert len(q.drain(1.0)) == 2
+    assert q.submitted == 3 and q.completed == 2
+
+
+# ------------------------------------------------------- properties
+@settings(max_examples=40)
+@given(plan=st.lists(
+    st.tuples(st.integers(0, 20),          # issue time (tenths)
+              st.integers(1, 10),          # duration (tenths)
+              st.integers(0, 1)),          # demand?
+    min_size=1, max_size=20),
+    lanes=st.integers(1, 3))
+def test_conservation_every_transfer_retires_once(plan, lanes):
+    """Every submitted transfer completes exactly once, regardless of
+    the submit schedule or priority mix, and timelines stay ordered."""
+    eng = TransferEngine(lanes=lanes)
+    subs = []
+    for issue, dur, demand in sorted(plan):
+        subs.append(eng.submit(issue / 10.0, dur / 10.0,
+                               key=len(subs), demand=bool(demand)))
+        eng.advance(issue / 10.0)
+    horizon = max(t.done for t in subs) + 1.0
+    retired = list(eng.retired) + eng.advance(horizon)
+    assert eng.advance(horizon + 1.0) == []          # nothing retires twice
+    assert sorted(t.seq for t in retired) == sorted(t.seq for t in subs)
+    assert eng.completed == eng.submitted == len(subs)
+    for t in subs:
+        assert t.issue <= t.start <= t.done
+        assert t.done == pytest.approx(t.start + t.duration)
+
+
+@settings(max_examples=40)
+@given(durs=st.lists(st.integers(1, 20), min_size=1, max_size=8),
+       compute=st.integers(0, 40))
+def test_stall_formula_property(durs, compute):
+    """stall == max(0, dma_done - compute_done) with dma_done the max
+    completion over the in-flight transfers for the requested keys."""
+    eng = TransferEngine(lanes=2)
+    ts = [eng.submit(0.0, d / 10.0, key=i) for i, d in enumerate(durs)]
+    compute_done = compute / 10.0
+    keys = [t.key for t in ts]
+    stall, blockers = eng.stall_until(keys, compute_done)
+    dma_done = max(t.done for t in ts)
+    assert stall == pytest.approx(max(0.0, dma_done - compute_done))
+    assert set(blockers) == {t.key for t in ts if t.done > compute_done}
+    # stall never charges transfers for keys the consumer doesn't need
+    assert eng.stall_until([], compute_done)[0] == 0.0
+
+
+@settings(max_examples=30)
+@given(durs=st.lists(st.integers(1, 10), min_size=2, max_size=10))
+def test_lane_exclusivity(durs):
+    """At most one transfer occupies a lane at any time (no overlap
+    between a lane's [start, done) intervals)."""
+    eng = TransferEngine(lanes=2)
+    ts = [eng.submit(0.0, d / 10.0, key=i, demand=(i % 3 == 0))
+          for i, d in enumerate(durs)]
+    by_lane = {}
+    for t in ts:
+        by_lane.setdefault(t.lane, []).append((t.start, t.done))
+    for spans in by_lane.values():
+        spans.sort()
+        for (s1, d1), (s2, _) in zip(spans, spans[1:]):
+            assert s2 >= d1 - 1e-12
