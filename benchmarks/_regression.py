@@ -1,0 +1,108 @@
+"""Shared machinery for the ``check_*_regression`` CI gates.
+
+Each gate compares the committed repo-root baseline
+(``BENCH_<name>.json``) against the fresh run the bench driver wrote to
+``benchmarks/results/BENCH_<name>.json``, prints one line per check,
+and — on failure — a per-cell baseline-vs-current diff table of every
+failing check, so a red CI job shows exactly which cells moved and by
+how much without re-running anything locally.
+
+Usage pattern (see any ``check_*_regression.py``):
+
+    gate = Gate("cache", __doc__)
+    gate.ap.add_argument("--hit-tolerance", type=float, default=0.02)
+    args = gate.parse(argv)
+    gate.check("cell/hit_rate", ok, base=b, now=got)
+    return gate.finish("OK: everything within tolerance")
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import List, Optional, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "results")
+
+
+def _fmt(v) -> str:
+    if v is None:
+        return "-"
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)
+
+
+class Gate:
+    """One regression gate: argument parsing, baseline/current loading,
+    uniform check lines, and the failure diff table."""
+
+    def __init__(self, bench: str, doc: Optional[str] = None):
+        self.bench = bench
+        self.ap = argparse.ArgumentParser(
+            description=doc,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
+        self.ap.add_argument(
+            "--baseline",
+            default=os.path.join(REPO_ROOT, f"BENCH_{bench}.json"))
+        self.ap.add_argument(
+            "--current",
+            default=os.path.join(RESULTS_DIR, f"BENCH_{bench}.json"))
+        # (name, ok, base, now, detail)
+        self.rows: List[Tuple[str, bool, str, str, str]] = []
+
+    def parse(self, argv=None) -> argparse.Namespace:
+        self.args = self.ap.parse_args(argv)
+        with open(self.args.baseline) as f:
+            self.base = json.load(f)
+        with open(self.args.current) as f:
+            self.cur = json.load(f)
+        if isinstance(self.base, dict) and isinstance(self.cur, dict) \
+                and "workload" in self.base \
+                and self.cur.get("workload") != self.base.get("workload"):
+            print(f"note: workload changed vs baseline — comparing "
+                  f"anyway; regenerate BENCH_{self.bench}.json if this "
+                  f"is intentional")
+        return self.args
+
+    # cells-shaped files are the common case; raw dicts also work
+    @property
+    def base_cells(self) -> dict:
+        return self.base.get("cells", self.base)
+
+    @property
+    def cur_cells(self) -> dict:
+        return self.cur.get("cells", self.cur)
+
+    def check(self, name: str, ok, detail: str = "", *,
+              base=None, now=None) -> bool:
+        """Record + print one named check. ``base``/``now`` feed the
+        failure diff table; ``detail`` carries the human explanation."""
+        ok = bool(ok)
+        self.rows.append((name, ok, _fmt(base), _fmt(now), detail))
+        extra = f" base={_fmt(base)} now={_fmt(now)}" \
+            if base is not None or now is not None else ""
+        print(f"{'ok ' if ok else 'FAIL'} {name:44s}{extra}  {detail}")
+        return ok
+
+    def finish(self, ok_msg: str) -> int:
+        """Exit code for ``main``: 0 when every check passed, else 1
+        after printing the per-cell baseline-vs-current diff table."""
+        failed = [r for r in self.rows if not r[1]]
+        if not failed:
+            print(ok_msg)
+            return 0
+        wname = max(len(r[0]) for r in failed)
+        wb = max(len("baseline"), max(len(r[2]) for r in failed))
+        wn = max(len("current"), max(len(r[3]) for r in failed))
+        print(f"\nregressed cells ({len(failed)}/{len(self.rows)} "
+              f"checks) — baseline vs current:")
+        print(f"  {'check':{wname}s}  {'baseline':>{wb}s} "
+              f"{'current':>{wn}s}  detail")
+        for name, _, b, n, detail in failed:
+            print(f"  {name:{wname}s}  {b:>{wb}s} {n:>{wn}s}  {detail}")
+        print(f"FAIL: BENCH_{self.bench} regressed in {len(failed)} "
+              f"check(s): {', '.join(r[0] for r in failed)}")
+        return 1

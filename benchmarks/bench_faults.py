@@ -1,0 +1,131 @@
+"""Fault-intensity sweep over the continuous server (PR 10 acceptance).
+
+Drives the trained reduced Mixtral through ``ContinuousOffloadServer``
+under three seeded fault intensities (none / low / high) x two cache
+policies, with the robustness knobs on (per-request deadlines, queue
+bound, shed-on-wait). Per cell: availability (completed / terminated),
+shed rate, degraded-token fraction (tokens decoded with at least one
+expert dropped), p99 step time on the simulated clock, and the fault
+counters.
+
+The ``none`` intensity runs a NULL ``FaultPlan`` and is asserted
+bit-transparent against a build with no injector attached at all —
+same tokens, same simulated clock, same serialized trace. Timeouts and
+shedding are step-based, so request outcomes are identical across
+intensities by design: faults move the degraded fraction and the
+clock, never the step count (decode always proceeds, degraded).
+
+Everything is seeded and runs on the simulated clock, so the numbers
+are machine-stable. Writes ``benchmarks/results/BENCH_faults.json``
+(gated against the committed ``BENCH_faults.json`` baseline by
+``check_faults_regression``) and emits house-format CSV lines.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR, emit, eval_prompts, \
+    trained_reduced_mixtral
+
+POLICIES = ("lru", "lfu")
+MAX_NEW = 12
+N_PROMPTS = 6
+
+
+def _plans():
+    from repro.core.faults import FaultPlan, StragglerWindow
+    return {
+        "none": FaultPlan.null(seed=0),
+        "low": FaultPlan(seed=0, dma_failure_rate=0.05,
+                         corruption_rate=0.01, max_retries=2),
+        "high": FaultPlan(seed=0, dma_failure_rate=0.35,
+                          disk_error_rate=0.2, corruption_rate=0.05,
+                          max_retries=1,
+                          straggler_windows=(
+                              StragglerWindow(0.0, 0.005, 4.0),)),
+    }
+
+
+def _run_server(cfg, params, *, policy, faults):
+    from repro.serving import ContinuousOffloadServer
+    from repro.serving.offload_serving import AdmissionRejected
+    # shed_wait_steps is set so the LAST admission wave (all prompts
+    # arrive at step 0, max_batch=2) sheds under queue pressure: the
+    # availability / shed_rate columns gate real lifecycle behavior,
+    # not a trivially-healthy run. Step-based deadlines make request
+    # outcomes identical across fault intensities by design.
+    srv = ContinuousOffloadServer(
+        params, cfg, cache_slots=4, policy=policy, max_batch=2,
+        cache_len=64, faults=faults, request_timeout_steps=90,
+        max_queue=8, shed_wait_steps=30)
+    for i, p in enumerate(eval_prompts(n=N_PROMPTS, seed=5)):
+        try:
+            srv.submit(p, max_new=MAX_NEW,
+                       deadline_steps=30 + 5 * i)
+        except AdmissionRejected:
+            pass
+    srv.run(max_steps=600)
+    assert srv.pending == 0, "chaos run failed to terminate"
+    return srv
+
+
+def _cell(srv) -> dict:
+    s = srv.stats()
+    return {
+        "availability": s["availability"],
+        "shed_rate": s["shed_rate"],
+        "degraded_frac": s.get("degraded_token_frac", 0.0),
+        "p99_step_s": s["p99_step_s"],
+        "completed": int(s["completed_requests"]),
+        "timeouts": int(s["timeout_requests"]),
+        "shed": int(s["shed_requests"] + s["rejected_requests"]),
+        "sim_time_s": s["sim_time_s"],
+        "fault_retries": int(s.get("fault_retries", 0)),
+        "fault_abandoned": int(s.get("fault_abandoned", 0)),
+    }
+
+
+def run() -> dict:
+    cfg, params = trained_reduced_mixtral()
+    cells: dict = {}
+
+    for policy in POLICIES:
+        # the transparency reference: no injector attached at all
+        ref = _run_server(cfg, params, policy=policy, faults=None)
+        for intensity, plan in _plans().items():
+            srv = _run_server(cfg, params, policy=policy, faults=plan)
+            if intensity == "none":
+                # null plan -> bit-identical to the no-injector build
+                assert {r: q.tokens for r, q in srv.finished.items()} == \
+                    {r: q.tokens for r, q in ref.finished.items()}, \
+                    f"null plan changed tokens ({policy})"
+                assert srv.engine.sim_time == ref.engine.sim_time, \
+                    f"null plan moved the clock ({policy})"
+                assert srv.trace.to_json() == ref.trace.to_json(), \
+                    f"null plan changed the trace ({policy})"
+            cell = _cell(srv)
+            cells[f"{policy}/{intensity}"] = cell
+            emit(f"faults_{policy}_{intensity}",
+                 cell["p99_step_s"] * 1e6,
+                 f"avail={cell['availability']:.3f} "
+                 f"shed={cell['shed_rate']:.3f} "
+                 f"degraded={cell['degraded_frac']:.3f}")
+        none, high = cells[f"{policy}/none"], cells[f"{policy}/high"]
+        assert none["degraded_frac"] == 0.0
+        assert high["fault_retries"] > 0
+
+    out = {"workload": {"model": "mixtral_reduced", "prompts": N_PROMPTS,
+                        "max_new": MAX_NEW, "policies": list(POLICIES),
+                        "intensities": list(_plans())},
+           "cells": cells}
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(RESULTS_DIR, "BENCH_faults.json")
+    with open(path, "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+    print(f"wrote {path}")
+    return out
+
+
+if __name__ == "__main__":
+    run()

@@ -23,62 +23,36 @@ Run:  PYTHONPATH=src python -m benchmarks.check_cache_regression
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import sys
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(REPO_ROOT, "BENCH_cache.json")
-CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "results", "BENCH_cache.json")
+from benchmarks._regression import Gate
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--current", default=CURRENT)
-    ap.add_argument("--hit-tolerance", type=float, default=0.02,
-                    help="allowed absolute hit-rate drop (2pp default)")
-    ap.add_argument("--transfer-tolerance", type=float, default=0.20,
-                    help="allowed fractional transfer-count growth")
-    args = ap.parse_args(argv)
+    gate = Gate("cache", __doc__)
+    gate.ap.add_argument("--hit-tolerance", type=float, default=0.02,
+                         help="allowed absolute hit-rate drop (2pp default)")
+    gate.ap.add_argument("--transfer-tolerance", type=float, default=0.20,
+                         help="allowed fractional transfer-count growth")
+    args = gate.parse(argv)
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.current) as f:
-        cur = json.load(f)
-
-    if cur.get("workload") != base.get("workload"):
-        print("note: workload changed vs baseline — comparing anyway; "
-              "regenerate BENCH_cache.json if this is intentional")
-
-    failed = []
-    print(f"{'cell':40s} {'hit/base':>8s} {'hit/now':>8s} "
-          f"{'tx/base':>8s} {'tx/now':>8s}")
-    for cell, b in sorted(base["cells"].items()):
-        got = cur["cells"].get(cell)
+    for cell, b in sorted(gate.base_cells.items()):
+        got = gate.cur_cells.get(cell)
         if got is None:
-            print(f"{cell:40s} {b['hit_rate']:8.4f} {'-':>8s} "
-                  f"{b['transfers']:8d} {'-':>8s}  MISSING")
-            failed.append(cell)
+            gate.check(cell, False, "missing from fresh run")
             continue
-        hit_bad = got["hit_rate"] < b["hit_rate"] - args.hit_tolerance
-        tx_bad = got["transfers"] > \
-            b["transfers"] * (1.0 + args.transfer_tolerance)
-        flag = ("  HIT-REGRESSED" if hit_bad else "") + \
-            ("  TRANSFERS-REGRESSED" if tx_bad else "")
-        print(f"{cell:40s} {b['hit_rate']:8.4f} {got['hit_rate']:8.4f} "
-              f"{b['transfers']:8d} {got['transfers']:8d}{flag}")
-        if hit_bad or tx_bad:
-            failed.append(cell)
+        gate.check(f"{cell}/hit_rate",
+                   got["hit_rate"] >= b["hit_rate"] - args.hit_tolerance,
+                   f"tolerance={args.hit_tolerance}",
+                   base=b["hit_rate"], now=got["hit_rate"])
+        gate.check(f"{cell}/transfers",
+                   got["transfers"] <=
+                   b["transfers"] * (1.0 + args.transfer_tolerance),
+                   f"tolerance={args.transfer_tolerance:.0%}",
+                   base=b["transfers"], now=got["transfers"])
 
-    if failed:
-        print(f"FAIL: cache metrics regressed in {len(failed)} cell(s): "
-              f"{', '.join(failed)}")
-        return 1
-    print("OK: hit rate and transfers within tolerance for every cell")
-    return 0
+    return gate.finish(
+        "OK: hit rate and transfers within tolerance for every cell")
 
 
 if __name__ == "__main__":

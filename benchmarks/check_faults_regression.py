@@ -1,0 +1,85 @@
+"""CI gate: fault-tolerance metrics must not regress vs the committed
+baseline.
+
+``bench_faults.run`` writes fresh metrics to
+``benchmarks/results/BENCH_faults.json``; the committed baseline lives
+at the repo root as ``BENCH_faults.json``. This script fails when, in
+any (policy, intensity) cell:
+
+- availability drops by more than ``--avail-tolerance`` (absolute) —
+  requests that used to complete now time out or get shed;
+- the shed rate grows by more than ``--avail-tolerance`` (absolute);
+- the degraded-token fraction grows by more than ``--frac-tolerance``
+  (relative) — more tokens decoded with dropped experts than the
+  committed fault schedule produced;
+- p99 step time grows by more than ``--p99-tolerance`` (relative) on
+  the simulated clock;
+- a ``*/none`` cell reports ANY degradation or fault activity (the
+  null-plan transparency contract — bench_faults also asserts
+  bit-identity against a no-injector build before writing the file).
+
+Everything is seeded and simulated-clock-driven, so the numbers are
+machine-stable. When the sweep changes shape intentionally:
+
+    PYTHONPATH=src python -m benchmarks.run --only faults
+    cp benchmarks/results/BENCH_faults.json BENCH_faults.json
+
+Run:  PYTHONPATH=src python -m benchmarks.check_faults_regression
+"""
+from __future__ import annotations
+
+import sys
+
+from benchmarks._regression import Gate
+
+
+def main(argv=None) -> int:
+    gate = Gate("faults", __doc__)
+    gate.ap.add_argument("--avail-tolerance", type=float, default=0.01,
+                         help="allowed absolute availability drop / "
+                              "shed-rate growth")
+    gate.ap.add_argument("--frac-tolerance", type=float, default=0.25,
+                         help="allowed relative degraded-frac growth")
+    gate.ap.add_argument("--p99-tolerance", type=float, default=0.25,
+                         help="allowed relative p99 step-time growth")
+    args = gate.parse(argv)
+
+    for cell, b in sorted(gate.base_cells.items()):
+        got = gate.cur_cells.get(cell)
+        if got is None:
+            gate.check(cell, False, "missing from fresh run")
+            continue
+        gate.check(f"{cell}/availability",
+                   got["availability"] >=
+                   b["availability"] - args.avail_tolerance,
+                   f"tolerance={args.avail_tolerance}",
+                   base=b["availability"], now=got["availability"])
+        gate.check(f"{cell}/shed_rate",
+                   got["shed_rate"] <=
+                   b["shed_rate"] + args.avail_tolerance,
+                   f"tolerance={args.avail_tolerance}",
+                   base=b["shed_rate"], now=got["shed_rate"])
+        gate.check(f"{cell}/degraded_frac",
+                   got["degraded_frac"] <=
+                   b["degraded_frac"] * (1 + args.frac_tolerance) + 1e-9,
+                   f"tolerance={args.frac_tolerance:.0%}",
+                   base=b["degraded_frac"], now=got["degraded_frac"])
+        gate.check(f"{cell}/p99_step_s",
+                   got["p99_step_s"] <=
+                   b["p99_step_s"] * (1 + args.p99_tolerance),
+                   f"tolerance={args.p99_tolerance:.0%}",
+                   base=b["p99_step_s"], now=got["p99_step_s"])
+        if cell.endswith("/none"):
+            gate.check(f"{cell}/transparent",
+                       got["degraded_frac"] == 0.0 and
+                       got["fault_retries"] == 0 and
+                       got["fault_abandoned"] == 0,
+                       "null plan must inject nothing",
+                       now=got["degraded_frac"])
+
+    return gate.finish(
+        "OK: availability, shedding and degradation within tolerance")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -25,76 +25,55 @@ Run:  PYTHONPATH=src python -m benchmarks.check_overlap_regression
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import sys
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(REPO_ROOT, "BENCH_overlap.json")
-CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "results", "BENCH_overlap.json")
+from benchmarks._regression import Gate
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--current", default=CURRENT)
-    ap.add_argument("--frac-tolerance", type=float, default=0.20,
-                    help="allowed relative exposed_frac regression")
-    ap.add_argument("--step-tolerance", type=int, default=2,
-                    help="allowed absolute steps-to-drain drift")
-    args = ap.parse_args(argv)
-
-    with open(args.baseline) as f:
-        base = json.load(f)["cells"]
-    with open(args.current) as f:
-        cur = json.load(f)["cells"]
-
-    failed = []
-
-    def check(name, ok, detail):
-        print(f"{'ok ' if ok else 'FAIL'} {name:40s} {detail}")
-        if not ok:
-            failed.append(name)
+    gate = Gate("overlap", __doc__)
+    gate.ap.add_argument("--frac-tolerance", type=float, default=0.20,
+                         help="allowed relative exposed_frac regression")
+    gate.ap.add_argument("--step-tolerance", type=int, default=2,
+                         help="allowed absolute steps-to-drain drift")
+    args = gate.parse(argv)
+    base, cur = gate.base_cells, gate.cur_cells
 
     pairs = sorted({k.rsplit("/", 1)[0] for k in base
                     if k.endswith("/overlap")})
     for pair in pairs:
         over, sync = cur.get(f"{pair}/overlap"), cur.get(f"{pair}/sync")
         if not (over and sync):
-            check(f"{pair}/present", False, "cells missing from fresh run")
+            gate.check(f"{pair}/present", False,
+                       "cells missing from fresh run")
             continue
-        check(f"{pair}/hides_transfers",
-              over["exposed_frac"] < sync["exposed_frac"],
-              f"overlap={over['exposed_frac']:.3f} "
-              f"sync={sync['exposed_frac']:.3f}")
-        check(f"{pair}/wins_sim_time",
-              over["sim_time_s"] < sync["sim_time_s"],
-              f"overlap={over['sim_time_s'] * 1e6:.1f}us "
-              f"sync={sync['sim_time_s'] * 1e6:.1f}us")
-        check(f"{pair}/transparent_steps",
-              over["steps"] <= sync["steps"],
-              f"overlap={over['steps']} sync={sync['steps']}")
+        gate.check(f"{pair}/hides_transfers",
+                   over["exposed_frac"] < sync["exposed_frac"],
+                   f"sync={sync['exposed_frac']:.3f}",
+                   now=over["exposed_frac"])
+        gate.check(f"{pair}/wins_sim_time",
+                   over["sim_time_s"] < sync["sim_time_s"],
+                   f"overlap={over['sim_time_s'] * 1e6:.1f}us "
+                   f"sync={sync['sim_time_s'] * 1e6:.1f}us")
+        gate.check(f"{pair}/transparent_steps",
+                   over["steps"] <= sync["steps"],
+                   f"sync={sync['steps']}", now=over["steps"])
         b = base[f"{pair}/overlap"]["exposed_frac"]
         ceiling = min(1.0, b * (1 + args.frac_tolerance))
-        check(f"{pair}/frac_vs_baseline",
-              over["exposed_frac"] <= ceiling,
-              f"base={b:.3f} now={over['exposed_frac']:.3f} "
-              f"ceiling={ceiling:.3f}")
+        gate.check(f"{pair}/frac_vs_baseline",
+                   over["exposed_frac"] <= ceiling,
+                   f"ceiling={ceiling:.3f}",
+                   base=b, now=over["exposed_frac"])
         for mode in ("overlap", "sync"):
             bs = base[f"{pair}/{mode}"]["steps"]
             got = cur[f"{pair}/{mode}"]["steps"]
-            check(f"{pair}/{mode}_steps",
-                  abs(got - bs) <= args.step_tolerance,
-                  f"base={bs} now={got}")
+            gate.check(f"{pair}/{mode}_steps",
+                       abs(got - bs) <= args.step_tolerance,
+                       f"tolerance={args.step_tolerance}",
+                       base=bs, now=got)
 
-    if failed:
-        print(f"FAIL: overlap bench regressed in {len(failed)} check(s): "
-              f"{', '.join(failed)}")
-        return 1
-    print("OK: overlap pipeline still beats synchronous in every cell")
-    return 0
+    return gate.finish(
+        "OK: overlap pipeline still beats synchronous in every cell")
 
 
 if __name__ == "__main__":

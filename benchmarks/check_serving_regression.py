@@ -22,55 +22,28 @@ Run:  PYTHONPATH=src python -m benchmarks.check_serving_regression
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import sys
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(REPO_ROOT, "BENCH_serving.json")
-CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "results", "BENCH_serving.json")
+from benchmarks._regression import Gate
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--current", default=CURRENT)
-    ap.add_argument("--tolerance", type=float, default=0.20,
-                    help="allowed fractional steps_to_drain growth")
-    args = ap.parse_args(argv)
+    gate = Gate("serving", __doc__)
+    gate.ap.add_argument("--tolerance", type=float, default=0.20,
+                         help="allowed fractional steps_to_drain growth")
+    args = gate.parse(argv)
 
-    with open(args.baseline) as f:
-        base = json.load(f)
-    with open(args.current) as f:
-        cur = json.load(f)
-
-    if cur.get("workload") != base.get("workload"):
-        print("note: workload changed vs baseline — comparing anyway; "
-              "regenerate BENCH_serving.json if this is intentional")
-
-    failed = []
-    print(f"{'cell':24s} {'base':>6s} {'now':>6s} {'limit':>6s}")
-    for cell, b in sorted(base["cells"].items()):
+    for cell, b in sorted(gate.base_cells.items()):
         want = b["steps_to_drain"]
         limit = want * (1.0 + args.tolerance)
-        got = cur["cells"].get(cell, {}).get("steps_to_drain")
+        got = gate.cur_cells.get(cell, {}).get("steps_to_drain")
         if got is None:
-            print(f"{cell:24s} {want:6d} {'-':>6s} {limit:6.1f}  MISSING")
-            failed.append(cell)
+            gate.check(cell, False, "missing from fresh run", base=want)
             continue
-        flag = "" if got <= limit else "  REGRESSED"
-        print(f"{cell:24s} {want:6d} {got:6d} {limit:6.1f}{flag}")
-        if got > limit:
-            failed.append(cell)
+        gate.check(cell, got <= limit, f"limit={limit:.1f}",
+                   base=want, now=got)
 
-    if failed:
-        print(f"FAIL: steps_to_drain regressed >{args.tolerance:.0%} "
-              f"in {len(failed)} cell(s): {', '.join(failed)}")
-        return 1
-    print("OK: steps_to_drain within tolerance for every cell")
-    return 0
+    return gate.finish("OK: steps_to_drain within tolerance for every cell")
 
 
 if __name__ == "__main__":

@@ -26,77 +26,57 @@ Run:  PYTHONPATH=src python -m benchmarks.check_tiers_regression
 """
 from __future__ import annotations
 
-import argparse
-import json
-import os
 import sys
 
-REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-BASELINE = os.path.join(REPO_ROOT, "BENCH_tiers.json")
-CURRENT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
-                       "results", "BENCH_tiers.json")
+from benchmarks._regression import Gate
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--baseline", default=BASELINE)
-    ap.add_argument("--current", default=CURRENT)
-    ap.add_argument("--step-tolerance", type=int, default=2,
-                    help="allowed absolute steps-to-drain growth")
-    ap.add_argument("--fetch-tolerance", type=float, default=0.25,
-                    help="allowed fractional disk-fetch-count drift")
-    args = ap.parse_args(argv)
-
-    with open(args.baseline) as f:
-        base = json.load(f)["cells"]
-    with open(args.current) as f:
-        cur = json.load(f)["cells"]
-
-    failed = []
-
-    def check(name, ok, detail):
-        print(f"{'ok ' if ok else 'FAIL'} {name:32s} {detail}")
-        if not ok:
-            failed.append(name)
+    gate = Gate("tiers", __doc__)
+    gate.ap.add_argument("--step-tolerance", type=int, default=2,
+                         help="allowed absolute steps-to-drain growth")
+    gate.ap.add_argument("--fetch-tolerance", type=float, default=0.25,
+                         help="allowed fractional disk-fetch-count drift")
+    args = gate.parse(argv)
+    base, cur = gate.base_cells, gate.cur_cells
 
     res, rep = cur.get("overcommit/resume"), cur.get("overcommit/replay")
     if not (res and rep):
-        check("overcommit/present", False, "cells missing from fresh run")
+        gate.check("overcommit/present", False,
+                   "cells missing from fresh run")
     else:
-        check("overcommit/preempts", res["preemptions"] >= 1,
-              f"preemptions={res['preemptions']}")
-        check("overcommit/resume_wins", res["steps"] < rep["steps"],
-              f"resume={res['steps']} replay={rep['steps']}")
+        gate.check("overcommit/preempts", res["preemptions"] >= 1,
+                   now=res["preemptions"])
+        gate.check("overcommit/resume_wins", res["steps"] < rep["steps"],
+                   f"resume={res['steps']} replay={rep['steps']}")
         for mode, got in (("resume", res), ("replay", rep)):
             b = base[f"overcommit/{mode}"]["steps"]
-            check(f"overcommit/{mode}_steps",
-                  got["steps"] <= b + args.step_tolerance,
-                  f"base={b} now={got['steps']}")
+            gate.check(f"overcommit/{mode}_steps",
+                       got["steps"] <= b + args.step_tolerance,
+                       f"tolerance={args.step_tolerance}",
+                       base=b, now=got["steps"])
 
     nvme, sata = cur.get("disk/nvme"), cur.get("disk/sata")
     if not (nvme and sata):
-        check("disk/present", False, "cells missing from fresh run")
+        gate.check("disk/present", False, "cells missing from fresh run")
     else:
-        check("disk/slower_costs_more",
-              sata["sim_time_s"] >= nvme["sim_time_s"],
-              f"nvme={nvme['sim_time_s']:.6f}s sata={sata['sim_time_s']:.6f}s")
+        gate.check("disk/slower_costs_more",
+                   sata["sim_time_s"] >= nvme["sim_time_s"],
+                   f"nvme={nvme['sim_time_s']:.6f}s "
+                   f"sata={sata['sim_time_s']:.6f}s")
         for name, got in (("nvme", nvme), ("sata", sata)):
             b = base[f"disk/{name}"]["disk_fetches"]
-            drift_ok = abs(got["disk_fetches"] - b) <= \
-                b * args.fetch_tolerance
-            check(f"disk/{name}_fetches", drift_ok,
-                  f"base={b} now={got['disk_fetches']}")
+            gate.check(f"disk/{name}_fetches",
+                       abs(got["disk_fetches"] - b) <=
+                       b * args.fetch_tolerance,
+                       f"tolerance={args.fetch_tolerance:.0%}",
+                       base=b, now=got["disk_fetches"])
 
     for cell in sorted(k for k in base if k.startswith("plan/")):
-        check(cell, cur.get(cell) == base[cell],
-              f"base={base[cell]} now={cur.get(cell)}")
+        gate.check(cell, cur.get(cell) == base[cell],
+                   base=base[cell], now=cur.get(cell))
 
-    if failed:
-        print(f"FAIL: tier bench regressed in {len(failed)} check(s): "
-              f"{', '.join(failed)}")
-        return 1
-    print("OK: every tiered-memory invariant holds vs baseline")
-    return 0
+    return gate.finish("OK: every tiered-memory invariant holds vs baseline")
 
 
 if __name__ == "__main__":

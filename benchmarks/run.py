@@ -18,17 +18,19 @@ import traceback
 def suite():
     from benchmarks import (bench_ablations, bench_adaptive_cache,
                             bench_beyond_paper, bench_cache_policies,
-                            bench_expert_distribution, bench_kernels,
-                            bench_memory_tiers, bench_offload_sweep,
-                            bench_overlap, bench_roofline,
-                            bench_serving_offload, bench_speculative,
-                            bench_traces, train_predictor)
+                            bench_expert_distribution, bench_faults,
+                            bench_kernels, bench_memory_tiers,
+                            bench_offload_sweep, bench_overlap,
+                            bench_roofline, bench_serving_offload,
+                            bench_speculative, bench_traces,
+                            train_predictor)
 
     return [
         ("table1_offload_sweep", bench_offload_sweep.run),
         ("serving_offload_batched", bench_serving_offload.run),
         ("memory_tiers", bench_memory_tiers.run),
         ("overlap", bench_overlap.run),
+        ("faults", bench_faults.run),
         ("table2_cache_policies", bench_cache_policies.run),
         ("learned_predictor", train_predictor.run),
         ("fig13_14_speculative", bench_speculative.run),

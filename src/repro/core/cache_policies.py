@@ -270,6 +270,12 @@ class LearnedPolicy(AgedLFU):
                  age_every: int = 32, persistent_counts: bool = True):
         super().__init__(capacity, decay=decay, age_every=age_every,
                          persistent_counts=persistent_counts)
+        if isinstance(model, str):
+            # checkpoint path: a missing/truncated/corrupt file warns
+            # and degrades to the exact AgedLFU fallback below instead
+            # of crashing mid-serve (robustness contract, test-enforced)
+            from repro.core.learned import LearnedModel
+            model = LearnedModel.load_or_none(model)
         self.model = model
         self.min_confidence = min_confidence
         self._decays = tuple(getattr(model, "decays", (0.5, 0.9, 0.98)))
@@ -443,4 +449,7 @@ POLICIES = {
 def make_policy(name: str, capacity: int, **kw) -> CachePolicy:
     if name == "belady":
         return Belady(capacity, kw.pop("future"))
+    if name not in POLICIES:
+        raise ValueError(f"unknown cache policy {name!r}: expected one "
+                         f"of {sorted(POLICIES) + ['belady']}")
     return POLICIES[name](capacity, **kw)

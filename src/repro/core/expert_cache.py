@@ -22,6 +22,7 @@ import numpy as np
 
 from repro.core.cache_policies import CachePolicy
 from repro.core.expert_store import ExpertStore
+from repro.core.faults import FetchOutcome
 
 
 class ExpertCache:
@@ -47,13 +48,14 @@ class ExpertCache:
 
     def __init__(self, layer: int, n_slots: int, policy: CachePolicy,
                  store: ExpertStore, shapes: Dict[str, tuple],
-                 dtype=jnp.float32, tiers=None):
+                 dtype=jnp.float32, tiers=None, faults=None):
         assert policy.capacity == n_slots
         self.layer = layer
         self.n_slots = n_slots
         self.policy = policy
         self.store = store
         self.tiers = tiers
+        self.faults = faults  # Optional[FaultInjector], shared stack-wide
         self.buffers = {k: jnp.zeros((n_slots, *s), dtype) for k, s in shapes.items()}
         self.slot_of: Dict[int, int] = {}
         self._free: List[int] = list(range(n_slots))
@@ -63,6 +65,12 @@ class ExpertCache:
         self.prefetches = 0
         self.bytes_transferred = 0
         self.last_miss_tiers: Tuple[str, ...] = ()
+        # fault-injection counters / last-call fault state
+        self.fetch_failures = 0       # demand fetches abandoned (degraded)
+        self.corrupt_refetches = 0    # checksum-mismatch redeliveries
+        self.last_failed: Tuple[int, ...] = ()
+        self.last_prefetch_failed: Tuple[int, ...] = ()
+        self.last_prefetch_outcomes: Dict[int, FetchOutcome] = {}
 
     # ------------------------------------------------------------------
     def cached_ids(self) -> Tuple[int, ...]:
@@ -73,10 +81,36 @@ class ExpertCache:
         """Hit test without touching policy state."""
         return eid in self.slot_of
 
+    def expert_tier(self, eid: int) -> str:
+        """Tier the master copy of ``eid`` would be served from."""
+        if self.tiers is not None:
+            return self.tiers.expert_tier((self.layer, eid))
+        return "host"
+
+    def plan_fetches(self, eids: Sequence[int]) -> Dict[int, FetchOutcome]:
+        """Pre-decide the fate of each would-be demand fetch among
+        ``eids`` (cached ids are hits — no fetch event is consumed).
+        The caller learns the degraded set BEFORE compute and hands the
+        same outcomes back to ``access`` (and to the transfer engine),
+        so randomness is consumed exactly once per fetch."""
+        if self.faults is None or self.faults.plan.is_null:
+            return {}
+        out = {}
+        for eid in eids:
+            if eid not in self.slot_of:
+                out[eid] = self.faults.fetch_plan(
+                    (self.layer, eid), tier=self.expert_tier(eid))
+        return out
+
     def _install(self, eid: int, pinned: frozenset = frozenset(), *,
-                 demand: bool = True) -> Tuple[int, Optional[int], str]:
+                 demand: bool = True,
+                 outcome: Optional[FetchOutcome] = None
+                 ) -> Tuple[int, Optional[int], str]:
         """Fetch eid from the store into a slot. Returns
-        (slot, evicted, tier served from)."""
+        (slot, evicted, tier served from). A caller-supplied ``outcome``
+        with corrupt deliveries exercises the REAL checksum path: the
+        payload is actually corrupted, the mismatch detected, and the
+        fetch redelivered."""
         evicted = None
         if self._free:
             slot = self._free.pop()
@@ -91,6 +125,16 @@ class ExpertCache:
         if self.tiers is not None:
             tier = self.tiers.fetch_expert((self.layer, eid), demand=demand)
         w = self.store.fetch((self.layer, eid))
+        if outcome is not None and outcome.corrupt_deliveries and \
+                self.faults is not None:
+            key = (self.layer, eid)
+            for _ in range(outcome.corrupt_deliveries):
+                bad = self.faults.corrupt_payload(w)
+                if self.store.verify(key, bad):
+                    w = bad  # crc collision: corruption slips through
+                    continue
+                self.corrupt_refetches += 1
+                w = self.store.fetch(key)
         for k, v in w.items():
             self.buffers[k] = self.buffers[k].at[slot].set(
                 jnp.asarray(v, self.buffers[k].dtype))
@@ -99,7 +143,8 @@ class ExpertCache:
         self.bytes_transferred += self.store.expert_nbytes((self.layer, eid))
         return slot, evicted, tier
 
-    def access(self, eids: Sequence[int]
+    def access(self, eids: Sequence[int],
+               outcomes: Optional[Dict[int, FetchOutcome]] = None
                ) -> Tuple[List[int], List[int], List[int]]:
         """Demand access for this token: returns (hits, misses, evicted).
 
@@ -107,38 +152,65 @@ class ExpertCache:
         by the current token can never evict another one of them; the
         caller chunks to ≤ capacity if the working set exceeds it.
         ``last_miss_tiers`` is left aligned with the returned misses.
+
+        ``outcomes`` (from ``plan_fetches``) carries pre-planned fault
+        fates: a miss whose outcome is abandoned is NOT installed — it
+        still counts as a miss (the attempts were made) and lands in
+        ``last_failed``; the engine degrades around it.
         """
         assert len(set(eids)) <= self.n_slots, "working set exceeds cache"
         pinned = frozenset(eids)
         hits, misses, evicted = [], [], []
         miss_tiers: List[str] = []
+        failed: List[int] = []
         for eid in eids:
             if eid in self.slot_of:
                 hits.append(eid)
                 self.policy.on_access(eid)
             else:
                 misses.append(eid)
-                _, ev, tier = self._install(eid, pinned)
+                out = outcomes.get(eid) if outcomes else None
+                if out is not None and not out.success:
+                    failed.append(eid)
+                    miss_tiers.append(self.expert_tier(eid))
+                    continue
+                _, ev, tier = self._install(eid, pinned, outcome=out)
                 miss_tiers.append(tier)
                 if ev is not None:
                     evicted.append(ev)
         self.hits += len(hits)
         self.misses += len(misses)
+        self.fetch_failures += len(failed)
         self.last_miss_tiers = tuple(miss_tiers)
+        self.last_failed = tuple(failed)
         self.policy.tick()
         return hits, misses, evicted
 
     def prefetch(self, eids: Sequence[int]) -> List[int]:
         """Speculatively admit eids (no demand stall). Returns the ids
-        actually transferred (already-cached ones are free)."""
+        actually transferred (already-cached ones are free). Under
+        fault injection each transfer's fate is planned here
+        (``last_prefetch_outcomes`` aligns with the returned list);
+        abandoned prefetches are not installed and land in
+        ``last_prefetch_failed`` — harmless, the demand path refetches.
+        """
         moved = []
+        fates: Dict[int, FetchOutcome] = self.plan_fetches(eids)
+        failed: List[int] = []
         for eid in eids:
             if eid in self.slot_of:
                 self.policy.on_access(eid)
                 continue
-            self._install(eid, demand=False)
+            out = fates.get(eid)
+            if out is not None and not out.success:
+                failed.append(eid)
+                continue
+            self._install(eid, demand=False, outcome=out)
             moved.append(eid)
         self.prefetches += len(moved)
+        self.last_prefetch_failed = tuple(failed)
+        self.last_prefetch_outcomes = {e: fates[e] for e in moved
+                                       if e in fates}
         return moved
 
     def gather(self, eids: Sequence[int]) -> Dict[str, jnp.ndarray]:

@@ -8,11 +8,23 @@ what is actually stored).
 """
 from __future__ import annotations
 
+import zlib
 from typing import Dict, Tuple
 
 import numpy as np
 
 Key = Tuple[int, int]  # (layer, expert_id)
+
+
+def payload_checksum(weights: dict) -> int:
+    """crc32 over the fp32 payload bytes, matrices in name order. Fast
+    enough to run per delivery under fault injection, strong enough to
+    catch any single flipped byte (see ``ExpertStore.verify``)."""
+    crc = 0
+    for name in sorted(weights):
+        arr = np.ascontiguousarray(weights[name], dtype=np.float32)
+        crc = zlib.crc32(arr.tobytes(), crc)
+    return crc
 
 
 def _quantize_int8(w: np.ndarray):
@@ -24,9 +36,11 @@ def _quantize_int8(w: np.ndarray):
 
 class ExpertStore:
     def __init__(self, *, quant: str = "none"):
-        assert quant in ("none", "int8")
+        if quant not in ("none", "int8"):
+            raise ValueError(f"quant must be 'none' or 'int8', got {quant!r}")
         self.quant = quant
         self._data: Dict[Key, dict] = {}
+        self._checksums: Dict[Key, int] = {}  # lazy, of the fp32 payload
 
     def put(self, key: Key, weights: dict) -> None:
         """weights: {'w1': [d,ff], 'w3': [d,ff], 'w2': [ff,d]} (device or np)."""
@@ -39,6 +53,7 @@ class ExpertStore:
             self._data[key] = entry
         else:
             self._data[key] = {k: ("raw", v, None) for k, v in host.items()}
+        self._checksums.pop(key, None)
 
     def fetch(self, key: Key) -> dict:
         """Dequantized fp32 weights (host)."""
@@ -47,6 +62,20 @@ class ExpertStore:
         for k, (kind, v, s) in entry.items():
             out[k] = v.astype(np.float32) * s if kind == "int8" else v
         return out
+
+    def checksum(self, key: Key) -> int:
+        """Reference checksum of ``key``'s dequantized payload (lazily
+        computed on first ask, cached until ``put`` overwrites)."""
+        if key not in self._checksums:
+            self._checksums[key] = payload_checksum(self.fetch(key))
+        return self._checksums[key]
+
+    def verify(self, key: Key, weights: dict) -> bool:
+        """True iff ``weights`` is a faithful delivery of ``key``'s
+        payload (checksums match). Under fault injection every
+        delivered fetch is verified; a corrupted copy fails here and
+        is refetched (see ``ExpertCache._install``)."""
+        return payload_checksum(weights) == self.checksum(key)
 
     def expert_nbytes(self, key: Key) -> int:
         entry = self._data[key]

@@ -40,12 +40,20 @@ layers of t), matching what an online predictor would have known.
 from __future__ import annotations
 
 import json
+import warnings
+import zipfile
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 DECAYS = (0.5, 0.9, 0.98)
 GAMMA = 0.8
+
+
+class ModelLoadError(ValueError):
+    """A ``LearnedModel`` checkpoint could not be loaded (missing file,
+    truncated/corrupt archive, missing arrays, wrong shapes). A
+    ``ValueError`` so generic callers need no new except clause."""
 N_FEATURES = 7
 
 
@@ -132,12 +140,57 @@ class LearnedModel:
 
     @classmethod
     def load(cls, path: str) -> "LearnedModel":
-        with np.load(path) as z:
-            meta = json.loads(bytes(z["meta"].tobytes()).decode()) \
-                if "meta" in z else {}
-            return cls(z["w"], z["mean"], z["std"], decays=tuple(z["decays"]),
-                       gamma=float(z["gamma"]),
-                       confidence=float(z["confidence"]), meta=meta)
+        """Load a ``save``d checkpoint. A missing, truncated, corrupt,
+        or wrong-shape file raises ``ModelLoadError`` (a ``ValueError``)
+        naming the problem — callers that must not crash mid-serve use
+        ``load_or_none`` and fall back (see ``LearnedPolicy``)."""
+        try:
+            z = np.load(path)
+        except (OSError, ValueError, zipfile.BadZipFile) as e:
+            # missing file, not-an-npz blob, truncated archive
+            raise ModelLoadError(f"cannot read model file {path!r}: {e}") \
+                from e
+        if not hasattr(z, "files"):  # a bare .npy array, not an .npz
+            raise ModelLoadError(
+                f"model file {path!r} is not an .npz archive")
+        with z:
+            missing = [k for k in ("w", "mean", "std", "decays", "gamma",
+                                   "confidence") if k not in z]
+            if missing:
+                raise ModelLoadError(
+                    f"model file {path!r} is missing arrays {missing} "
+                    f"(truncated or not a LearnedModel checkpoint)")
+            try:
+                w, mean, std = z["w"], z["mean"], z["std"]
+                decays = tuple(z["decays"])
+                gamma = float(z["gamma"])
+                confidence = float(z["confidence"])
+                meta = json.loads(bytes(z["meta"].tobytes()).decode()) \
+                    if "meta" in z else {}
+            except (ValueError, KeyError, json.JSONDecodeError) as e:
+                # zlib CRC failures on corrupt members surface as
+                # ValueError/BadZipFile during array decompression
+                raise ModelLoadError(
+                    f"model file {path!r} is corrupt: {e}") from e
+            if w.shape != (N_FEATURES,) or mean.shape != (N_FEATURES,) \
+                    or std.shape != (N_FEATURES,):
+                raise ModelLoadError(
+                    f"model file {path!r} has wrong shapes "
+                    f"(w {w.shape}, mean {mean.shape}, std {std.shape}; "
+                    f"expected ({N_FEATURES},))")
+            return cls(w, mean, std, decays=decays, gamma=gamma,
+                       confidence=confidence, meta=meta)
+
+    @classmethod
+    def load_or_none(cls, path: str) -> Optional["LearnedModel"]:
+        """``load`` that returns None (after a warning) instead of
+        raising — the serve-time entry point: a bad checkpoint degrades
+        to the heuristic fallback, never crashes the server."""
+        try:
+            return cls.load(path)
+        except ModelLoadError as e:
+            warnings.warn(str(e), stacklevel=2)
+            return None
 
 
 # ---------------------------------------------------------------------

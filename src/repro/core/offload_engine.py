@@ -24,6 +24,7 @@ from repro.core.cache_policies import CachePolicy, make_policy
 from repro.core.costmodel import CostModel, HardwareProfile, ModelBytes
 from repro.core.expert_cache import ExpertCache
 from repro.core.expert_store import ExpertStore
+from repro.core.faults import as_injector
 from repro.core.prefetch import (LearnedPredictor, MarkovPredictor,
                                  SpeculativePrefetcher)
 from repro.core.trace import TraceRecorder
@@ -109,22 +110,39 @@ class OffloadEngine:
                  ffn_impl: str = "xla",  # "xla"|"ref"|"pallas"|"pallas_interpret"
                  trace: Optional[TraceRecorder] = None,
                  tiers=None,   # repro.core.memory_tiers.TieredMemoryManager
+                 faults=None,  # FaultPlan | FaultInjector | None
                  seed: int = 0):
         assert cfg.is_moe, "offloading targets MoE experts"
-        assert prefetch in (None, "spec", "markov", "learned")
-        assert ffn_impl in ("xla", "ref", "pallas", "pallas_interpret")
+        if prefetch not in (None, "spec", "markov", "learned"):
+            raise ValueError(
+                f"unknown prefetch={prefetch!r}: expected one of "
+                f"None, 'spec', 'markov', 'learned'")
+        if ffn_impl not in ("xla", "ref", "pallas", "pallas_interpret"):
+            raise ValueError(
+                f"unknown ffn_impl={ffn_impl!r}: expected one of "
+                f"'xla', 'ref', 'pallas', 'pallas_interpret'")
         self.params = params
         self.cfg = cfg
         if isinstance(cache_slots, int):
+            if cache_slots < 1:
+                raise ValueError(
+                    f"cache_slots must be >= 1, got {cache_slots}")
             slots = [cache_slots] * cfg.num_layers
         else:
             slots = list(cache_slots)
             assert len(slots) == cfg.num_layers
+            if any(s < 1 for s in slots):
+                raise ValueError(
+                    f"per-layer cache_slots must all be >= 1, got {slots}")
         # per-layer budgets (beyond paper: skewed layers need fewer slots)
         self.slots = [max(1, min(s, cfg.num_experts)) for s in slots]
         self.cache_slots = sum(self.slots) / cfg.num_layers
         self.prefetch_mode = prefetch
         self.trace = trace if trace is not None else TraceRecorder()
+        # one injector shared by caches, transfer engine and tier
+        # arbiter, so fault-event indices are globally consistent;
+        # None (the default) keeps every path bit-identical to pre-fault
+        self.faults = as_injector(faults, trace=self.trace)
         self.store = ExpertStore.from_params(params, cfg, quant=quant)
 
         d, ff = cfg.d_model, cfg.expert_d_ff
@@ -137,7 +155,8 @@ class OffloadEngine:
             pol = (policy_factory(l) if policy_factory is not None
                    else make_policy(policy, self.slots[l], **pkw))
             self.caches.append(ExpertCache(l, self.slots[l], pol,
-                                           self.store, shapes))
+                                           self.store, shapes,
+                                           faults=self.faults))
 
         mb = ModelBytes.from_config(cfg)
         eb = self.store.expert_nbytes((0, 0))
@@ -149,13 +168,15 @@ class OffloadEngine:
         # host->device expert copy engine (the executed overlap
         # pipeline's clock; idle when overlap=False — the synchronous
         # path keeps the analytic step_latency accounting exactly)
-        self.xfer = TransferEngine(lanes=2)
+        self.xfer = TransferEngine(lanes=2, faults=self.faults)
         self._clock = 0.0                 # per-step pipeline clock
         self.transfer_busy_s = 0.0        # DMA seconds issued
         self.exposed_transfer_s = 0.0     # DMA seconds the clock saw
         self.sim_time = 0.0
         self.tokens_done = 0
         self._steps_done = 0
+        self.degraded_tokens = 0          # tokens decoded w/ dropped experts
+        self._step_fault_stall_s = 0.0    # sync-path fault extras this step
         self.spec = SpeculativePrefetcher(cfg) if prefetch == "spec" else None
         self.markov = (MarkovPredictor(cfg.num_layers, cfg.num_experts,
                                        cfg.num_experts_per_tok)
@@ -183,6 +204,10 @@ class OffloadEngine:
             tiers.register_expert(key, self.store.expert_nbytes(key))
         for c in self.caches:
             c.tiers = tiers
+        if self.faults is not None and getattr(tiers, "queue", None) is not None:
+            # KV parks / disk spills ride the same injector (their
+            # chains never abandon — a parked snapshot is the only copy)
+            tiers.queue.faults = self.faults
 
     # ------------------------------------------------------------------
     def init_state(self, batch: int, cache_len: int):
@@ -226,22 +251,27 @@ class OffloadEngine:
         return ids, probs
 
     def _issue_transfers(self, layer: int, eids: Sequence[int], *,
-                         demand: bool) -> None:
+                         demand: bool, outcomes=None) -> None:
         """Submit host->device expert copies to the copy engine at the
         current pipeline clock (overlap mode only). Demand copies may
         displace queued prefetches; prefetches queue behind the lane
         tails. Keyed ``(layer, expert)`` so the consuming layer can ask
-        when its working set is actually resident."""
+        when its working set is actually resident. ``outcomes`` maps
+        expert id -> pre-planned ``FetchOutcome`` (fault injection): a
+        retrying chain holds its lane longer, an abandoned one ends at
+        the give-up time — the consumer discovers the failure then."""
         dur = self.cost.expert_transfer_time()
         nb = self.cost.mb.expert_bytes
         for e in eids:
-            self.xfer.submit(self._clock, dur, key=(layer, int(e)),
-                             kind="expert", nbytes=nb, demand=demand)
-            self.transfer_busy_s += dur
+            t = self.xfer.submit(self._clock, dur, key=(layer, int(e)),
+                                 kind="expert", nbytes=nb, demand=demand,
+                                 outcome=(outcomes or {}).get(int(e)))
+            self.transfer_busy_s += t.duration
 
     def _moe_offloaded(self, p_l, layer: int, h,
                        pending_guess: Tuple[int, ...],
                        pending_moved: Tuple[int, ...],
+                       pending_outcomes: Dict[int, object],
                        prompt_ids: Sequence[int],
                        token_indices: Sequence[int],
                        active: Sequence[bool]):
@@ -261,6 +291,14 @@ class OffloadEngine:
         ``stall = max(0, dma_done - compute_done)``, recorded per layer
         in the trace. The synchronous path exposes the full transfer
         time, exactly as ``CostModel.step_latency`` prices it.
+
+        Under fault injection the layer's demand fetches are PRE-PLANNED
+        (``ExpertCache.plan_fetches``): a fetch whose retry chain is
+        abandoned drops its expert from this step's compute, and every
+        affected row's combine weights are RENORMALIZED over the experts
+        that did arrive (drop-missing-expert fallback — decode proceeds,
+        degraded, never stalls forever). The dropped set and per-row
+        degradation flags land in the trace for quality attribution.
         """
         cfg = self.cfg
         x = rms_norm(h, p_l["ln2"], cfg.norm_eps)
@@ -274,6 +312,21 @@ class OffloadEngine:
         cache = self.caches[layer]
         cache_before = cache.cached_ids()
 
+        # fault injection: decide each demand fetch's fate BEFORE
+        # compute, so the dropped set (abandoned chains) is known when
+        # the combine weights are built ({} without an injector)
+        fates = cache.plan_fetches(union)
+        failed = {e for e, o in fates.items() if not o.success}
+        scale = None
+        if failed:
+            # drop-missing-expert fallback: renormalize each affected
+            # row's gate weights over the experts that did arrive; a
+            # row that lost ALL its experts contributes zero MoE output
+            avail = ~np.isin(ids, sorted(failed))          # [B,k]
+            denom = (probs * avail).sum(axis=-1)           # [B]
+            safe = np.where(denom > 0.0, denom, 1.0)
+            scale = np.where(denom > 0.0, 1.0 / safe, 0.0)
+
         # working set may exceed the cache: stream it in chunks ≤ capacity
         hits: List[int] = []
         misses: List[int] = []
@@ -283,14 +336,23 @@ class OffloadEngine:
         cap = cache.n_slots
         for c0 in range(0, len(union), cap):
             chunk = union[c0:c0 + cap]
-            h_, m_, e_ = cache.access(chunk)
+            # fault-free path keeps the pre-fault call shape (tests
+            # monkeypatch ``access`` to drive Belady's cursor)
+            h_, m_, e_ = (cache.access(chunk, outcomes=fates) if fates
+                          else cache.access(chunk))
             hits += h_
             misses += m_
             evicted += e_
             miss_tiers += list(cache.last_miss_tiers)
-            w = cache.gather(chunk)
-            comb = _combine_matrix(chunk, ids, probs, active,
+            comp = ([e for e in chunk if e not in failed] if failed
+                    else chunk)
+            if not comp:
+                continue
+            w = cache.gather(comp)
+            comb = _combine_matrix(comp, ids, probs, active,
                                    cfg.num_experts)
+            if scale is not None:
+                comb = (comb * scale[:, None]).astype(np.float32)
             y = y + _grouped_ffn(x[:, 0, :], w["w1"], w["w3"], w["w2"],
                                  jnp.asarray(comb), impl=self.ffn_impl)
         h = h + y[:, None, :].astype(h.dtype)
@@ -302,8 +364,11 @@ class OffloadEngine:
             # demand misses hit the copy engine's priority class at the
             # layer's start (routing readback); already-issued
             # prefetches for this layer may still be in flight — both
-            # only cost what outlives the layer's compute
-            self._issue_transfers(layer, misses, demand=True)
+            # only cost what outlives the layer's compute. Fault chains
+            # ride the same lanes: retries hold them longer, an
+            # abandoned chain ends at its give-up time.
+            self._issue_transfers(layer, misses, demand=True,
+                                  outcomes=fates or None)
             compute_done = self._clock + t_comp
             keys = [(layer, e) for e in union]
             stall_s, blockers = self.xfer.stall_until(keys, compute_done)
@@ -318,6 +383,17 @@ class OffloadEngine:
                        * self.cost.expert_transfer_time())
             self.transfer_busy_s += stall_s
             inflight = ()
+            if fates or pending_outcomes:
+                # fault extras BEYOND the one-transfer-per-miss the
+                # formula above prices: retries + backoff, plus whole
+                # abandoned chains (their misses moved bytes too)
+                base = self.cost.expert_transfer_time()
+                extra = sum(o.extra_s(base, self.faults.plan)
+                            for o in fates.values())
+                extra += sum(o.extra_s(base, self.faults.plan)
+                             for o in pending_outcomes.values())
+                stall_s += extra
+                self._step_fault_stall_s += extra
         self.exposed_transfer_s += stall_s
         if "shared" in p_l["moe"]:
             s = p_l["moe"]["shared"]
@@ -329,6 +405,10 @@ class OffloadEngine:
         req_tok = tuple(int(token_indices[b]) for b in range(B) if active[b])
         req_act = tuple(tuple(sorted(int(e) for e in ids[b]))
                         for b in range(B) if active[b])
+        # per-row degradation flags (aligned with req_ids): a row is
+        # degraded at this layer iff one of ITS routed experts dropped
+        req_deg = (tuple(bool(not avail[b].all()) for b in range(B)
+                         if active[b]) if failed else ())
         # legacy single-stream fields: exact when the step serves one
         # request (or several rows of one), sentinel otherwise
         pid = req_ids[0] if len(set(req_ids)) == 1 else -1
@@ -347,8 +427,11 @@ class OffloadEngine:
             # tier attribution only when an arbiter is attached, so
             # pre-tiering traces stay byte-identical
             miss_tiers=(tuple(miss_tiers) if self.tiers is not None else ()),
-            stall_s=stall_s, inflight=inflight)
-        return h, acts, len(misses)
+            stall_s=stall_s, inflight=inflight,
+            # fault-free steps keep both empty so trace JSON stays
+            # byte-identical with pre-fault output
+            dropped=tuple(sorted(failed)), request_degraded=req_deg)
+        return h, acts, len(misses), req_deg
 
     # ------------------------------------------------------------------
     def decode_token(self, state, token, pos: int, token_idx: int):
@@ -404,14 +487,19 @@ class OffloadEngine:
                                          cfg.d_model).astype(h.dtype)
 
         # guesses issued at layer l are consumed at layer l+1 of the SAME
-        # token pass (the prefetch travels ahead of the compute wavefront)
-        pending: Dict[int, Tuple[Tuple[int, ...], Tuple[int, ...]]] = {}
+        # token pass (the prefetch travels ahead of the compute wavefront);
+        # each entry is (guess, moved, fault outcomes of the moved ids)
+        pending: Dict[int, Tuple[Tuple[int, ...], Tuple[int, ...], Dict]] = {}
         step_misses = 0
         step_prefetch = 0
         act_rows = np.asarray([b for b in range(B) if active[b]], np.int32)
         # the executed pipeline clock starts where the last step ended;
         # per-layer stages advance it by compute + exposed stall
         self._clock = self.sim_time
+        self._step_fault_stall_s = 0.0
+        step_degraded = [False] * n_active
+        if self.faults is not None:
+            self.faults.now = self.sim_time
 
         for l in range(cfg.num_layers):
             p_l = _layer_slice(params["layers"], l)
@@ -429,16 +517,23 @@ class OffloadEngine:
                                         p_next["moe"]["router"])
                 moved = self.caches[l + 1].prefetch(guess)
                 step_prefetch += len(moved)
-                pending[l + 1] = (guess, tuple(moved))
+                pending[l + 1] = (guess, tuple(moved),
+                                  dict(self.caches[l + 1]
+                                       .last_prefetch_outcomes))
                 if self.overlap:
                     # issued before layer l's MoE computes: the copy
                     # has layer l's compute window to hide under
-                    self._issue_transfers(l + 1, moved, demand=False)
+                    self._issue_transfers(
+                        l + 1, moved, demand=False,
+                        outcomes=self.caches[l + 1].last_prefetch_outcomes
+                        or None)
 
-            pg, pm = pending.get(l, ((), ()))
-            h, acts, misses = self._moe_offloaded(
-                p_l, l, h, pg, pm, prompt_ids, token_indices, active)
+            pg, pm, po = pending.get(l, ((), (), {}))
+            h, acts, misses, req_deg = self._moe_offloaded(
+                p_l, l, h, pg, pm, po, prompt_ids, token_indices, active)
             step_misses += misses
+            for i, d in enumerate(req_deg):
+                step_degraded[i] |= d
             predictor = self.markov if self.markov is not None else self.learned
             if predictor is not None:
                 if self.learned is not None:
@@ -458,12 +553,17 @@ class OffloadEngine:
                     guess = predictor.predict(l, acts)
                     moved = self.caches[l + 1].prefetch(guess)
                     step_prefetch += len(moved)
-                    pending[l + 1] = (guess, tuple(moved))
+                    pending[l + 1] = (guess, tuple(moved),
+                                      dict(self.caches[l + 1]
+                                           .last_prefetch_outcomes))
                     if self.overlap:
                         # predicted AFTER layer l's MoE (the clock has
                         # advanced past it): the copy hides under layer
                         # l+1's attention + FFN compute
-                        self._issue_transfers(l + 1, moved, demand=False)
+                        self._issue_transfers(
+                            l + 1, moved, demand=False,
+                            outcomes=self.caches[l + 1]
+                            .last_prefetch_outcomes or None)
             self._prev_acts[l] = acts
 
         logits = tf.logits_from_hidden(params, cfg, h)[:, 0]
@@ -483,6 +583,13 @@ class OffloadEngine:
                 step_misses / cfg.num_layers,
                 prefetch_per_layer=step_prefetch / cfg.num_layers,
                 batch=n_active)
+            if self._step_fault_stall_s:
+                # retries/backoff/abandoned chains land ON TOP of the
+                # analytic formula (which prices one transfer per miss)
+                self.sim_time += self._step_fault_stall_s
+        if self.faults is not None:
+            self.faults.now = self.sim_time
+            self.degraded_tokens += sum(1 for d in step_degraded if d)
         if self.tiers is not None:
             # tier stalls (disk-resident demand fetches, in-flight
             # demotion waits) land on top of the host-link pricing
@@ -604,4 +711,16 @@ class OffloadEngine:
         }
         if self.tiers is not None:
             s.update(self.tiers.stats())
+        if self.faults is not None:
+            # health/degradation summary (keys absent without an
+            # injector so pre-fault stats stay unchanged)
+            s.update(self.faults.stats())
+            s["fetch_failures"] = sum(c.fetch_failures for c in self.caches)
+            s["corrupt_refetches"] = sum(c.corrupt_refetches
+                                         for c in self.caches)
+            s["degraded_tokens"] = self.degraded_tokens
+            s["degraded_token_frac"] = (self.degraded_tokens
+                                        / max(self.tokens_done, 1))
+            s["dma_retries"] = self.xfer.retries
+            s["dma_abandoned"] = self.xfer.abandoned
         return s

@@ -50,6 +50,16 @@ class StepTrace:
     # in flight when the layer's compute finished — the stall causers;
     # always empty on the synchronous path
     inflight: Tuple[int, ...] = ()
+    # --- degraded-mode decode accounting (PR 10) ----------------------
+    # experts of this layer's union whose fetch exhausted its fault
+    # retries: decode proceeded WITHOUT them, renormalizing each row's
+    # gate weights over the resident experts (drop-missing-expert
+    # fallback). Empty on every fault-free path.
+    dropped: Tuple[int, ...] = ()
+    # per-active-row degradation flags aligned with ``request_ids``:
+    # True when that request's token routed to a dropped expert this
+    # layer (the per-token quality-impact attribution)
+    request_degraded: Tuple[bool, ...] = ()
     # global engine step (one per decode_tokens call): aligns the layers
     # of one token pass so the learned predictor's same-token
     # previous-layer transition feature survives batched/interleaved
@@ -89,10 +99,28 @@ class TierEvent:
     sim_time: float = 0.0
 
 
+@dataclasses.dataclass
+class FaultEvent:
+    """One injected-fault observation (see ``repro.core.faults``):
+    ``kind`` in {"dma", "disk", "corrupt", "straggler", "request"},
+    ``action`` in {"retry", "abandon", "slow", "timeout", "shed"},
+    ``key`` = (layer, expert_id) for fetches / (rid,) for requests,
+    ``attempt`` the failed attempt index, ``sim_time`` when the
+    injector last saw the simulated clock, and a freeform ``detail``
+    (e.g. the shed reason). docs/traces.md documents the schema."""
+    kind: str
+    action: str
+    key: Tuple = ()
+    attempt: int = 0
+    sim_time: float = 0.0
+    detail: str = ""
+
+
 class TraceRecorder:
     def __init__(self):
         self.steps: List[StepTrace] = []
         self.tier_events: List[TierEvent] = []
+        self.fault_events: List[FaultEvent] = []
 
     def record(self, **kw) -> None:
         self.steps.append(StepTrace(**kw))
@@ -100,6 +128,11 @@ class TraceRecorder:
     def record_tier(self, **kw) -> None:
         """Append a ``TierEvent`` (called by ``TieredMemoryManager``)."""
         self.tier_events.append(TierEvent(**kw))
+
+    def record_fault(self, **kw) -> None:
+        """Append a ``FaultEvent`` (called by ``FaultInjector`` and the
+        serving layer's timeout/shed paths)."""
+        self.fault_events.append(FaultEvent(**kw))
 
     # ------------------------------------------------------------ stats
     def cache_precision_recall(self, *, layer: Optional[int] = None
@@ -250,6 +283,28 @@ class TraceRecorder:
                 c["host"] += len(s.misses)
         return dict(c)
 
+    def degraded_token_counts(self) -> Tuple[int, int]:
+        """(degraded, total) over distinct (request, token) pairs. A
+        token counts as degraded when ANY of its layers dropped an
+        expert it routed to (``StepTrace.request_degraded`` /
+        ``dropped``) — the per-token quality-impact attribution of the
+        drop-missing-expert fallback."""
+        degraded: set = set()
+        total: set = set()
+        for s in self.steps:
+            if s.request_ids:
+                flags = s.request_degraded or (False,) * len(s.request_ids)
+                for rid, tok, bad in zip(s.request_ids,
+                                         s.request_token_idx, flags):
+                    total.add((rid, tok))
+                    if bad:
+                        degraded.add((rid, tok))
+            else:
+                total.add((s.prompt_id, s.token_idx))
+                if s.dropped:
+                    degraded.add((s.prompt_id, s.token_idx))
+        return len(degraded), len(total)
+
     def temporal_locality(self, *, layer: Optional[int] = None) -> float:
         """P(expert of token t also used by token t-1) — the Mixtral-paper
         statistic the baseline's caching exploits."""
@@ -302,16 +357,26 @@ class TraceRecorder:
 
     def to_json(self) -> str:
         """Serialize. Stays the legacy flat step list whenever there
-        are no tier events (bit-compatible with every earlier reader);
-        with tier events it becomes ``{"steps": [...],
-        "tier_events": [...]}`` — ``from_json`` loads both shapes (the
-        format docs/traces.md specifies)."""
+        are no tier or fault events (bit-compatible with every earlier
+        reader — the fault-free degradation fields are stripped too);
+        otherwise it becomes ``{"steps": [...], "tier_events": [...],
+        "fault_events": [...]}`` — ``from_json`` loads both shapes
+        (the format docs/traces.md specifies)."""
         steps = [dataclasses.asdict(s) for s in self.steps]
-        if not self.tier_events:
+        for d in steps:
+            # fault-free steps serialize byte-identically to pre-fault
+            # builds: the degradation fields only appear when populated
+            if not d["dropped"]:
+                del d["dropped"]
+            if not d["request_degraded"]:
+                del d["request_degraded"]
+        if not self.tier_events and not self.fault_events:
             return json.dumps(steps)
         return json.dumps({
             "steps": steps,
             "tier_events": [dataclasses.asdict(e) for e in self.tier_events],
+            "fault_events": [dataclasses.asdict(e)
+                             for e in self.fault_events],
         })
 
     @classmethod
@@ -327,8 +392,10 @@ class TraceRecorder:
         tr = cls()
         data = json.loads(s)
         events = []
+        faults = []
         if isinstance(data, dict):
             events = data.get("tier_events", [])
+            faults = data.get("fault_events", [])
             data = data["steps"]
         for d in data:
             tr.steps.append(StepTrace(**{k: detuple(v) for k, v in d.items()
@@ -338,4 +405,9 @@ class TraceRecorder:
             tr.tier_events.append(TierEvent(**{k: detuple(v)
                                                for k, v in d.items()
                                                if k in eknown}))
+        fknown = {f.name for f in dataclasses.fields(FaultEvent)}
+        for d in faults:
+            tr.fault_events.append(FaultEvent(**{k: detuple(v)
+                                                 for k, v in d.items()
+                                                 if k in fknown}))
         return tr

@@ -25,6 +25,19 @@ keys ``K`` and finishes its FLOPs at ``compute_done`` stalls for
 ``max(0, dma_done(K) - compute_done)`` — see ``stall_until``. Transfers
 that land before the compute does are fully hidden; only the tail that
 sticks out past ``compute_done`` is exposed.
+
+With a ``FaultInjector`` attached (``faults=``, see
+``repro.core.faults``) the engine becomes fault-aware: a submit may
+resolve into a RETRY CHAIN — failed attempts re-copy after exponential
+backoff, the lane is HELD across the whole chain (a retrying demand
+keeps its priority slot; backoff models device re-arm time), and a
+chain that exhausts its retries is ABANDONED (``Transfer.ok=False`` —
+the consumer degrades instead of waiting forever). A transfer may also
+carry a ``deadline``: a chain that cannot complete by it is cut there
+and abandoned. Straggler windows scale a copy's duration by the lane
+bandwidth factor at its start time. With no injector (or a null plan)
+every schedule is byte-identical to the pre-fault engine
+(test-enforced).
 """
 from __future__ import annotations
 
@@ -37,7 +50,11 @@ class Transfer:
     """One scheduled copy. ``issue`` is when it was submitted,
     ``start`` when a lane began copying, ``done`` when the bytes are
     usable. ``demand`` transfers block a consumer; prefetches do not.
-    ``info`` carries caller fields (``SwapQueue`` match keys)."""
+    ``info`` carries caller fields (``SwapQueue`` match keys).
+    Under fault injection ``duration`` is the full retry-chain lane
+    occupancy, ``attempts`` how many copies it took, and ``ok`` False
+    when the chain was abandoned (retries exhausted or ``deadline``
+    missed) — the bytes then never become usable."""
     seq: int
     key: Hashable
     kind: str
@@ -49,6 +66,9 @@ class Transfer:
     lane: int
     demand: bool
     info: dict = dataclasses.field(default_factory=dict)
+    attempts: int = 1
+    ok: bool = True
+    deadline: Optional[float] = None
 
 
 class TransferEngine:
@@ -62,7 +82,7 @@ class TransferEngine:
     (conservation, test-enforced).
     """
 
-    def __init__(self, lanes: int = 2):
+    def __init__(self, lanes: int = 2, faults=None):
         assert lanes >= 1
         self.n_lanes = lanes
         self._lanes: List[List[Transfer]] = [[] for _ in range(lanes)]
@@ -73,33 +93,88 @@ class TransferEngine:
         self.completed = 0
         self.busy_s = 0.0          # total copy seconds issued
         self.preempted = 0         # queued prefetches displaced by demand
+        self.faults = faults       # Optional[FaultInjector]
+        self.retries = 0           # extra copy attempts across all chains
+        self.abandoned = 0         # chains that gave up (retries/deadline)
+        self.deadline_missed = 0   # transfers cut at their deadline
 
     # ------------------------------------------------------------ submit
     def submit(self, now: float, duration: float, *,
                key: Hashable = None, kind: str = "xfer", nbytes: int = 0,
-               demand: bool = False, **info) -> Transfer:
+               demand: bool = False, outcome=None,
+               deadline: Optional[float] = None, **info) -> Transfer:
         """Schedule ``duration`` seconds of copy starting no earlier
         than ``now``. Demand transfers pick the lane whose
         demand-visible tail (started or demand transfers only) frees
         first and push queued prefetches behind them; prefetches pick
-        the lane whose full tail frees first."""
+        the lane whose full tail frees first.
+
+        Under fault injection the copy may become a retry chain:
+        ``outcome`` (a pre-planned ``FetchOutcome``, e.g. from
+        ``ExpertCache.plan_fetches``) or the injector's own
+        ``transfer_plan`` decides attempts/abandonment, and the lane is
+        held for the whole chain. ``deadline`` (absolute sim time) cuts
+        a chain that cannot finish by then. Without an injector both
+        knobs are inert and the schedule is byte-identical to PR 9."""
         assert duration >= 0.0
         t = Transfer(seq=self.submitted, key=key, kind=kind,
                      nbytes=int(nbytes), duration=float(duration),
                      issue=float(now), start=0.0, done=0.0, lane=-1,
-                     demand=bool(demand), info=info)
+                     demand=bool(demand), info=info, deadline=deadline)
         if demand:
-            self._submit_demand(t, now)
+            lane = min(range(self.n_lanes), key=lambda i: self._barrier(i, now))
+            t.lane = lane
+            t.start = self._barrier(lane, now)
         else:
             lane = min(range(self.n_lanes), key=lambda i: self._tail(i, now))
             t.lane = lane
             t.start = self._tail(lane, now)
-            t.done = t.start + t.duration
+        copy_s = self._resolve_chain(t, outcome)
+        t.done = t.start + t.duration
+        if demand:
+            self._place_demand(t, now)
+        else:
             self._lanes[lane].append(t)
         self.inflight.append(t)
         self.submitted += 1
-        self.busy_s += t.duration
+        self.busy_s += copy_s
         return t
+
+    def _resolve_chain(self, t: Transfer, outcome) -> float:
+        """Resolve ``t``'s effective lane occupancy under fault
+        injection. Returns the actual copy seconds issued (excludes
+        backoff gaps); sets ``t.duration`` to the full occupancy and
+        ``t.attempts``/``t.ok``. Fault-free: ``t`` untouched."""
+        copy_s = t.duration
+        inj = self.faults
+        if inj is not None and not inj.plan.is_null:
+            factor = inj.bw_factor(t.lane, t.start)
+            if outcome is None:
+                outcome = inj.transfer_plan(
+                    t.key, kind=t.kind, abandonable=False)
+            t.attempts = max(outcome.attempts, 1)
+            copy_s = t.attempts * t.duration * factor
+            t.duration = copy_s + outcome.backoff_s(inj.plan)
+            if not outcome.success:
+                t.ok = False
+            self.retries += max(t.attempts - 1, 0)
+            if not outcome.success:
+                self.abandoned += 1
+        if t.deadline is not None and t.start + t.duration > t.deadline:
+            # the consumer will not wait past the deadline: cut the
+            # chain there and abandon — the bytes never land
+            cut = max(t.deadline - t.start, 0.0)
+            copy_s = min(copy_s, cut)
+            t.duration = cut
+            if t.ok:
+                t.ok = False
+                self.abandoned += 1
+            self.deadline_missed += 1
+            if inj is not None:
+                inj.deadline_missed += 1
+                inj._event("dma", "timeout", t.key, t.attempts,
+                           f"deadline={t.deadline:.6g}")
+        return copy_s
 
     def _tail(self, lane: int, now: float) -> float:
         return max([now] + [x.done for x in self._lanes[lane]])
@@ -111,12 +186,10 @@ class TransferEngine:
         return max([now] + [x.done for x in self._lanes[lane]
                             if x.demand or x.start <= now])
 
-    def _submit_demand(self, t: Transfer, now: float) -> None:
-        lane = min(range(self.n_lanes), key=lambda i: self._barrier(i, now))
-        t.lane = lane
-        t.start = self._barrier(lane, now)
-        t.done = t.start + t.duration
-        q = self._lanes[lane]
+    def _place_demand(self, t: Transfer, now: float) -> None:
+        """Insert an already-scheduled demand transfer into its lane,
+        displacing queued-not-started prefetches behind it."""
+        q = self._lanes[t.lane]
         keep = [x for x in q if x.demand or x.start <= now]
         bumped = [x for x in q if not (x.demand or x.start <= now)]
         self.preempted += len(bumped)
@@ -126,7 +199,7 @@ class TransferEngine:
             x.start = cur
             x.done = x.start + x.duration
             cur = x.done
-        self._lanes[lane] = keep + [t] + bumped
+        self._lanes[t.lane] = keep + [t] + bumped
 
     # ----------------------------------------------------------- queries
     def advance(self, now: float) -> List[Transfer]:
@@ -199,4 +272,7 @@ class TransferEngine:
             "inflight": len(self.inflight),
             "busy_s": self.busy_s,
             "preempted": self.preempted,
+            "retries": self.retries,
+            "abandoned": self.abandoned,
+            "deadline_missed": self.deadline_missed,
         }

@@ -98,6 +98,17 @@ def _planned_expert_bytes(cfg) -> int:
     return 3 * cfg.d_model * cfg.expert_d_ff * 4
 
 
+class AdmissionRejected(RuntimeError):
+    """``submit`` refused a request under load shedding. ``reason`` is
+    the typed cause (currently only ``"queue_full"``); the request was
+    never assigned an rid and holds no server state."""
+
+    def __init__(self, reason: str, detail: str = ""):
+        super().__init__(f"admission rejected ({reason}): {detail}"
+                         if detail else f"admission rejected ({reason})")
+        self.reason = reason
+
+
 class ContinuousOffloadServer:
     """Continuous-batching scheduler over a shared expert cache."""
 
@@ -118,14 +129,44 @@ class ContinuousOffloadServer:
                  tier_expert_frac: float = 0.5,
                  host_budget_bytes: Optional[int] = None,
                  resume_from_host: bool = True,
-                 tier_lanes: int = 2):
-        assert max_batch >= 1
-        assert kv_layout in ("paged", "dense")
-        assert 0.0 <= kv_watermark < 1.0
-        assert prefill_chunk >= 1
-        assert prefill_chunk == 1 or kv_layout == "paged", \
-            "chunked prefill needs paged KV (virtual rows share a " \
-            "block-table row; dense KV is addressed by batch row)"
+                 tier_lanes: int = 2,
+                 faults=None,  # FaultPlan | FaultInjector | None
+                 request_timeout_steps: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 shed_wait_steps: Optional[int] = None):
+        # knob validation up front: a clear ValueError at construction
+        # beats a deep stack trace mid-serve
+        if max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {max_batch}")
+        if cache_len < 1:
+            raise ValueError(f"cache_len must be >= 1, got {cache_len}")
+        if kv_layout not in ("paged", "dense"):
+            raise ValueError(f"unknown kv_layout={kv_layout!r}: "
+                             f"expected 'paged' or 'dense'")
+        if not 0.0 <= kv_watermark < 1.0:
+            raise ValueError(
+                f"kv_watermark must be in [0, 1), got {kv_watermark}")
+        if prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {prefill_chunk}")
+        if not 0.0 <= tier_expert_frac <= 1.0:
+            raise ValueError(f"tier_expert_frac must be in [0, 1], "
+                             f"got {tier_expert_frac}")
+        if hbm_budget_bytes is not None and hbm_budget_bytes <= 0:
+            raise ValueError(f"hbm_budget_bytes must be positive, "
+                             f"got {hbm_budget_bytes}")
+        if host_budget_bytes is not None and host_budget_bytes <= 0:
+            raise ValueError(f"host_budget_bytes must be positive, "
+                             f"got {host_budget_bytes}")
+        for name, v in (("request_timeout_steps", request_timeout_steps),
+                        ("max_queue", max_queue),
+                        ("shed_wait_steps", shed_wait_steps)):
+            if v is not None and v < 1:
+                raise ValueError(f"{name} must be >= 1 (or None), got {v}")
+        if prefill_chunk > 1 and kv_layout != "paged":
+            raise ValueError(
+                "chunked prefill needs paged KV (virtual rows share a "
+                "block-table row; dense KV is addressed by batch row)")
         self.cfg = cfg
         # ---- tiered-memory arbitration (repro.core.memory_tiers) -----
         # ``hbm_budget_bytes`` replaces the independent cache_slots /
@@ -137,9 +178,11 @@ class ContinuousOffloadServer:
         # for comparison — the tier bench's baseline arm).
         self.resume_from_host = resume_from_host
         if hbm_budget_bytes is not None:
-            assert kv_layout == "paged", "the HBM arbiter needs paged KV"
-            assert cache_slots is None and kv_num_blocks is None, \
-                "hbm_budget_bytes replaces cache_slots/kv_num_blocks"
+            if kv_layout != "paged":
+                raise ValueError("the HBM arbiter needs paged KV")
+            if cache_slots is not None or kv_num_blocks is not None:
+                raise ValueError(
+                    "hbm_budget_bytes replaces cache_slots/kv_num_blocks")
             mb = ModelBytes.from_config(cfg)
             cache_slots, kv_num_blocks = plan_hbm_split(
                 hbm_budget_bytes, num_layers=cfg.num_layers,
@@ -148,16 +191,18 @@ class ContinuousOffloadServer:
                 kv_block_bytes=kv_block_size * mb.kv_bytes_per_token
                 * cfg.num_layers,
                 expert_frac=tier_expert_frac)
-        assert cache_slots is not None, \
-            "pass cache_slots or hbm_budget_bytes"
+        if cache_slots is None:
+            raise ValueError("pass cache_slots or hbm_budget_bytes")
         self.max_batch = max_batch
         self.prefill_chunk = prefill_chunk
         # per-step token budget: every active request is guaranteed one
         # token; the leftover goes to catching-up rows (scheduler order)
         self.step_tokens = step_tokens if step_tokens is not None \
             else max_batch * prefill_chunk
-        assert self.step_tokens >= max_batch, \
-            "step_tokens must cover one token per slot"
+        if self.step_tokens < max_batch:
+            raise ValueError(
+                f"step_tokens must cover one token per slot "
+                f"(>= max_batch={max_batch}), got {self.step_tokens}")
         # fixed virtual-row batch width (stable shapes -> one XLA trace)
         self._step_rows = max_batch if prefill_chunk == 1 \
             else self.step_tokens
@@ -174,7 +219,11 @@ class ContinuousOffloadServer:
             params, cfg, cache_slots=cache_slots, policy=policy,
             policy_kw=policy_kw, learned_model=learned_model,
             prefetch=prefetch, quant=quant, hw=hw, overlap=overlap,
-            ffn_impl=ffn_impl, trace=self.trace)
+            ffn_impl=ffn_impl, trace=self.trace, faults=faults)
+        self.faults = self.engine.faults  # normalized FaultInjector|None
+        self.request_timeout_steps = request_timeout_steps
+        self.max_queue = max_queue
+        self.shed_wait_steps = shed_wait_steps
         self.kv_layout = kv_layout
         self.kv_block_size = kv_block_size
         self.kv_watermark = kv_watermark
@@ -211,21 +260,43 @@ class ContinuousOffloadServer:
         self.step_count = 0            # completed engine steps
         self.tenant_service: Dict[str, int] = {}  # tokens served/tenant
         self.partial_rids: set = set()  # unfinished rids of the last run()
+        self.rejected = 0              # AdmissionRejected at submit()
+        self._step_times: List[float] = []  # per-step sim seconds
 
     # ------------------------------------------------------------ admin
     def submit(self, prompt: Sequence[int], *, max_new: int,
                temperature: Optional[float] = None,
                top_p: Optional[float] = None,
                seed: Optional[int] = None,
-               priority: int = 0, tenant: Optional[str] = None) -> int:
+               priority: int = 0, tenant: Optional[str] = None,
+               deadline_steps: Optional[int] = None) -> int:
         """Queue a request; returns its id (the trace prompt_id).
 
         Rejects (raises ValueError) a request that could NEVER be
         served: longer than the paged pool's total capacity, or than a
         dense slot's ``cache_len``. Requests that fit but find the pool
         busy are NOT rejected — they wait in the queue (and running
-        requests may be preempted/requeued to make room)."""
-        assert len(prompt) >= 1, "empty prompt"
+        requests may be preempted/requeued to make room) — unless
+        ``max_queue`` is configured and full, which raises
+        ``AdmissionRejected`` (load shedding at the door).
+        ``deadline_steps`` overrides the server's
+        ``request_timeout_steps`` for this request."""
+        if len(prompt) < 1:
+            raise ValueError("empty prompt")
+        if max_new < 0:
+            raise ValueError(f"max_new must be >= 0, got {max_new}")
+        if deadline_steps is not None and deadline_steps < 1:
+            raise ValueError(
+                f"deadline_steps must be >= 1 (or None), got {deadline_steps}")
+        if self.max_queue is not None and len(self.queue) >= self.max_queue:
+            self.rejected += 1
+            self.trace.record_fault(
+                kind="request", action="shed", key=(),
+                sim_time=self.engine.sim_time,
+                detail=f"queue_full: {len(self.queue)} >= {self.max_queue}")
+            raise AdmissionRejected(
+                "queue_full", f"{len(self.queue)} queued >= "
+                f"max_queue={self.max_queue}")
         total = len(prompt) + max_new
         if self.kv_layout == "paged":
             if total > self.paged.capacity_tokens:
@@ -240,7 +311,8 @@ class ContinuousOffloadServer:
         req = Request(prompt=list(prompt), max_new=max_new, rid=rid,
                       temperature=temperature, top_p=top_p, seed=seed,
                       priority=priority, tenant=tenant,
-                      submit_step=self.step_count)
+                      submit_step=self.step_count,
+                      deadline_steps=deadline_steps)
         self.queue.append(req)
         return rid
 
@@ -416,12 +488,65 @@ class ContinuousOffloadServer:
 
     def _retire(self, req: Request) -> None:
         req.done = True
+        req.status = "completed"
         req.finish_step = self.step_count
         if self.paged is not None:
             self.paged.free_request(req.rid)
         self.slots[req.slot] = None
         req.slot = -1
         self.finished[req.rid] = req
+
+    def _terminate(self, req: Request, status: str, reason: str) -> None:
+        """Terminal exit OTHER than completion: timeout or shed. Frees
+        every server resource the request holds (slot, KV blocks,
+        parked host snapshot, queue position) so nothing leaks and the
+        drain loop always makes progress; the typed reason lands on the
+        request and in the trace as a ``FaultEvent``."""
+        req.done = True
+        req.status = status
+        req.shed_reason = reason
+        req.finish_step = self.step_count
+        if req.slot >= 0:
+            if self.paged is not None:
+                self.paged.free_request(req.rid)
+            self.slots[req.slot] = None
+            req.slot = -1
+        elif req in self.queue:
+            self.queue.remove(req)
+        if self.tiers is not None and self.tiers.is_parked(req.rid):
+            self.tiers.drop_kv(req.rid)
+        self.finished[req.rid] = req
+        self.trace.record_fault(kind="request", action=status,
+                                key=(req.rid,),
+                                sim_time=self.engine.sim_time,
+                                detail=reason)
+
+    def _expire_and_shed(self) -> List[int]:
+        """Apply per-request deadlines and queue-pressure shedding at
+        the step boundary (both off unless configured). Returns the
+        rids terminated here."""
+        gone: List[int] = []
+        if self.request_timeout_steps is None and \
+                self.shed_wait_steps is None and \
+                not any(r.deadline_steps is not None
+                        for r in self.slots if r is not None) and \
+                not any(r.deadline_steps is not None for r in self.queue):
+            return gone
+        live = [r for r in self.slots if r is not None] + list(self.queue)
+        for req in live:
+            dl = req.deadline_steps if req.deadline_steps is not None \
+                else self.request_timeout_steps
+            if dl is not None and self.step_count - req.submit_step >= dl:
+                self._terminate(req, "timeout", "deadline_steps")
+                gone.append(req.rid)
+                continue
+            if self.shed_wait_steps is not None and req.slot < 0 and \
+                    self.step_count - req.submit_step >= self.shed_wait_steps:
+                # still queued this long means sustained pool/tier
+                # pressure (deferred admission / repeated preemption)
+                self._terminate(req, "shed", "queue_pressure")
+                gone.append(req.rid)
+        return gone
 
     # ------------------------------------------------------------- step
     def _plan_chunks(self, active: List[Request]) -> Dict[int, int]:
@@ -446,7 +571,9 @@ class ContinuousOffloadServer:
         """One token-boundary: admit, plan chunk budgets, grow/steal KV
         pages (paged), decode every active slot — ``chunks[rid]``
         virtual rows at consecutive positions when catching up —
-        sample/advance, retire. Returns rids retired now."""
+        sample/advance, retire. Returns rids retired now (completed,
+        timed out, or shed — check ``Request.status``)."""
+        expired = self._expire_and_shed()
         self._admit()
         chunks = self._plan_chunks([r for r in self.slots if r is not None])
         if self.paged is not None:
@@ -458,7 +585,7 @@ class ContinuousOffloadServer:
                                              self.engine.sim_time)
         active = [r is not None for r in self.slots]
         if not any(active):
-            return []
+            return expired
 
         B = self.max_batch
         last_row: Dict[int, int] = {}
@@ -509,10 +636,12 @@ class ContinuousOffloadServer:
         if self.paged is not None:
             block_tables = jnp.asarray(self.paged.table_array(row_rids))
 
+        t0 = self.engine.sim_time
         logits, self.state = self.engine.decode_tokens(
             self.state, jnp.asarray(tokens), positions,
             prompt_ids=prompt_ids, active=row_active,
             block_tables=block_tables)
+        self._step_times.append(self.engine.sim_time - t0)
         self._logits = logits
         self.step_count += 1
 
@@ -538,7 +667,7 @@ class ContinuousOffloadServer:
             req.out.append(self._sample(req, logits[last_row[req.rid]]))
             if self.eos_id is not None and req.out[-1] == self.eos_id:
                 req.eos_hit = True
-        return retired
+        return expired + retired
 
     def _sample(self, req: Request, row) -> int:
         temp = self.temperature if req.temperature is None else req.temperature
@@ -587,9 +716,25 @@ class ContinuousOffloadServer:
         s["queued_requests"] = len(self.queue)
         s["active_requests"] = self.num_active
         s["server_steps"] = self.step_count
-        fin = list(self.finished.values())
+        fin = [r for r in self.finished.values()
+               if r.status in ("", "completed")]
         s["mean_wait_steps"] = (
             sum(r.wait_steps() for r in fin) / len(fin)) if fin else 0.0
+        # --- health / degradation summary (docs/robustness.md) --------
+        # every terminal request is completed, timed out, or shed;
+        # availability = completed / terminated (1.0 on a healthy server)
+        term = list(self.finished.values())
+        timeouts = sum(1 for r in term if r.status == "timeout")
+        shed = sum(1 for r in term if r.status == "shed")
+        s["completed_requests"] = len(fin)
+        s["timeout_requests"] = timeouts
+        s["shed_requests"] = shed
+        s["rejected_requests"] = self.rejected
+        denom = max(len(term) + self.rejected, 1)
+        s["availability"] = len(fin) / denom
+        s["shed_rate"] = (shed + self.rejected) / denom
+        s["p99_step_s"] = (float(np.percentile(self._step_times, 99))
+                           if self._step_times else 0.0)
         if self.paged is not None:
             blk_bytes = self.engine.cost.kv_block_bytes(self.kv_block_size)
             s["kv_num_blocks"] = self.paged.num_blocks

@@ -34,6 +34,17 @@ class Request:
     priority: int = 0             # higher admits first under "priority"
     tenant: Optional[str] = None  # fairness group under "priority"
 
+    # --- robustness lifecycle (see docs/robustness.md) ----------------
+    status: str = ""              # terminal: "completed"|"timeout"|"shed"
+                                  # ("" while live; legacy retirements
+                                  # also read as completed)
+    shed_reason: str = ""         # typed reason when status != completed
+                                  # ("deadline_steps", "queue_pressure",
+                                  # "queue_full")
+    deadline_steps: Optional[int] = None  # per-request timeout override
+                                  # (server steps from submit; None ->
+                                  # server default)
+
     # --- latency accounting (server step counter timestamps) ----------
     submit_step: int = -1         # server step count at submit()
     admit_step: int = -1          # first admission (queue wait ends)

@@ -143,4 +143,7 @@ SCHEDULERS: Dict[str, type] = {
 
 def make_scheduler(name: str, **kw) -> Scheduler:
     """Instantiate a scheduler by registry name (see ``SCHEDULERS``)."""
+    if name not in SCHEDULERS:
+        raise ValueError(f"unknown scheduler {name!r}: expected one of "
+                         f"{sorted(SCHEDULERS)}")
     return SCHEDULERS[name](**kw)

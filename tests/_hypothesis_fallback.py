@@ -30,6 +30,14 @@ class _Integers(Strategy):
         return rnd.randint(self.min_value, self.max_value)
 
 
+class _Floats(Strategy):
+    def __init__(self, min_value: float, max_value: float):
+        self.min_value, self.max_value = min_value, max_value
+
+    def example(self, rnd):
+        return rnd.uniform(self.min_value, self.max_value)
+
+
 class _SampledFrom(Strategy):
     def __init__(self, elems: Sequence):
         self.elems = list(elems)
@@ -72,6 +80,10 @@ class strategies:  # mirrors `from hypothesis import strategies as st`
     @staticmethod
     def integers(min_value: int = 0, max_value: int = 100) -> Strategy:
         return _Integers(min_value, max_value)
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> Strategy:
+        return _Floats(min_value, max_value)
 
     @staticmethod
     def sampled_from(elems) -> Strategy:

@@ -1,0 +1,600 @@
+"""Fault-injection layer: deterministic chaos, retrying transfers,
+degraded-mode decode, and the null-plan bit-identity contract.
+
+The load-bearing invariant of PR 10: with ``faults=None`` or a null
+``FaultPlan`` every consumer takes its pre-fault code path — generated
+tokens, simulated clocks, stats dicts and serialized traces are
+bit-identical to a build with no injector attached. Under a non-null
+plan the system never crashes or hangs: every fetch chain is bounded,
+every abandoned expert degrades decode by renormalizing gate weights
+over the resident set, and every server request terminates with a
+typed status (completed / timeout / shed).
+"""
+import json
+import zipfile
+
+import jax
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # pragma: no cover - minimal env
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from conftest import tiny
+from repro.core import OffloadEngine, TransferEngine
+from repro.core.expert_store import ExpertStore, payload_checksum
+from repro.core.faults import (FaultInjector, FaultPlan, FetchOutcome,
+                               StragglerWindow, as_injector)
+from repro.core.trace import TraceRecorder
+from repro.models import transformer as tf
+from repro.serving import ContinuousOffloadServer
+from repro.serving.offload_serving import AdmissionRejected
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = tiny("mixtral-8x7b", layers=2, d_model=32, experts=4, vocab=64)
+    params = tf.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+# ===================================================== plan validation
+def test_fault_plan_validates_rates():
+    for bad in (-0.1, 1.5):
+        with pytest.raises(ValueError):
+            FaultPlan(dma_failure_rate=bad)
+    with pytest.raises(ValueError):
+        FaultPlan(max_retries=-1)
+    with pytest.raises(ValueError):
+        FaultPlan(backoff_mult=0.5)
+    assert FaultPlan.null().is_null
+    assert not FaultPlan(dma_failure_rate=0.1).is_null
+    assert not FaultPlan(
+        straggler_windows=(StragglerWindow(0, 1, 2.0),)).is_null
+
+
+def test_as_injector_normalizes():
+    assert as_injector(None) is None
+    inj = as_injector(FaultPlan(seed=3))
+    assert isinstance(inj, FaultInjector)
+    assert as_injector(inj) is inj
+    with pytest.raises(ValueError):
+        as_injector("chaos")
+    with pytest.raises(ValueError):
+        FaultInjector("not a plan")
+
+
+# =================================================== injector determinism
+def test_fetch_plan_deterministic_and_order_independent():
+    """Decisions are pure functions of (seed, kind, key, event_index,
+    attempt): two injectors replay identically, and the N-th fetch of a
+    key sees the same fate regardless of interleaving with other keys."""
+    plan = FaultPlan(seed=7, dma_failure_rate=0.4, corruption_rate=0.1)
+    keys = [(layer, e) for layer in range(2) for e in range(4)]
+
+    a = FaultInjector(plan)
+    seq_a = [(k, a.fetch_plan(k)) for k in keys * 3]
+
+    b = FaultInjector(plan)
+    # different global interleaving: per-key order is what matters
+    by_key = {}
+    for k in reversed(keys):
+        for _ in range(3):
+            by_key.setdefault(k, []).append(b.fetch_plan(k))
+
+    per_key_a = {}
+    for k, out in seq_a:
+        per_key_a.setdefault(k, []).append(out)
+    for k in keys:
+        assert [(o.success, o.fail_kinds) for o in per_key_a[k]] == \
+            [(o.success, o.fail_kinds) for o in by_key[k]], k
+
+
+def test_fetch_plan_seed_changes_outcomes():
+    keys = [("l", i) for i in range(64)]
+    fates = []
+    for seed in (0, 1):
+        inj = FaultInjector(FaultPlan(seed=seed, dma_failure_rate=0.5))
+        fates.append(tuple(inj.fetch_plan(k).fail_kinds for k in keys))
+    assert fates[0] != fates[1]
+
+
+def test_fetch_plan_abandons_after_max_retries():
+    inj = FaultInjector(FaultPlan(seed=0, dma_failure_rate=1.0,
+                                  max_retries=2))
+    out = inj.fetch_plan(("l", 0))
+    assert not out.success
+    assert out.fail_kinds == ("dma",) * 3   # max_retries + 1 attempts
+    assert out.attempts == 3
+    assert inj.abandoned == 1
+
+
+def test_disk_error_rate_only_applies_to_disk_tier():
+    plan = FaultPlan(seed=0, disk_error_rate=1.0)
+    inj = FaultInjector(plan)
+    assert inj.fetch_plan(("l", 0), tier="host").success
+    out = FaultInjector(plan).fetch_plan(("l", 0), tier="disk")
+    assert not out.success and set(out.fail_kinds) == {"disk"}
+
+
+def test_transfer_plan_non_abandonable_always_succeeds():
+    """KV / generic transfers carry the only copy of their data: faults
+    may retry them but the final attempt is forced to succeed."""
+    inj = FaultInjector(FaultPlan(seed=1, dma_failure_rate=1.0))
+    for i in range(8):
+        out = inj.transfer_plan(("kv", i), kind="kv")
+        assert out.success
+        assert out.attempts == inj.plan.max_retries + 1
+    assert inj.abandoned == 0
+    out = inj.transfer_plan(("x", 0), abandonable=True)
+    assert not out.success
+    assert inj.abandoned == 1
+
+
+def test_outcome_timing_arithmetic():
+    plan = FaultPlan(seed=0, backoff_base_s=1.0, backoff_mult=2.0)
+    ok = FetchOutcome(key=None)
+    assert ok.occupancy_s(3.0, plan) == 3.0
+    assert ok.extra_s(3.0, plan) == 0.0
+    retried = FetchOutcome(key=None, success=True,
+                           fail_kinds=("dma", "dma"))
+    # 3 attempts x 3s + backoffs (1 + 2)
+    assert retried.backoff_s(plan) == 3.0
+    assert retried.occupancy_s(3.0, plan) == 12.0
+    assert retried.extra_s(3.0, plan) == 9.0
+    dead = FetchOutcome(key=None, success=False, fail_kinds=("dma",) * 2)
+    # abandoned: the fault-free path prices nothing, so everything is extra
+    assert dead.extra_s(3.0, plan) == dead.occupancy_s(3.0, plan) == 7.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 1000), rate=st.floats(0.0, 1.0))
+def test_fetch_plan_chain_always_bounded(seed, rate):
+    plan = FaultPlan(seed=seed, dma_failure_rate=rate, corruption_rate=0.2)
+    inj = FaultInjector(plan)
+    for i in range(16):
+        out = inj.fetch_plan(("l", i))
+        assert out.attempts <= plan.max_retries + 1
+        assert out.success or len(out.fail_kinds) == plan.max_retries + 1
+
+
+# ======================================================= transfer engine
+def test_transfer_engine_null_injector_bit_identical():
+    runs = []
+    for faults in (None, FaultInjector(FaultPlan.null())):
+        xfer = TransferEngine(lanes=2, faults=faults)
+        for i in range(6):
+            xfer.submit(i * 0.1, 0.5, key=("e", i), demand=(i % 2 == 0))
+        runs.append((xfer.stats(),
+                     [(t.lane, t.start, t.done) for lane in xfer._lanes
+                      for t in lane]))
+    assert runs[0] == runs[1]
+
+
+def test_transfer_engine_retry_holds_lane():
+    """A retry chain occupies ONE lane entry whose duration covers all
+    attempts plus backoff — demand priority is preserved because the
+    chain never re-enters the queue."""
+    inj = FaultInjector(FaultPlan(seed=1, dma_failure_rate=1.0,
+                                  max_retries=2, backoff_base_s=0.25))
+    xfer = TransferEngine(lanes=1, faults=inj)
+    t = xfer.submit(0.0, 1.0, key=("kv", 0), kind="kv")
+    assert t.ok and t.attempts == 3            # forced final success
+    # 3 copies x 1s + backoff 0.25 + 0.5
+    assert t.duration == pytest.approx(3.75)
+    assert t.done == pytest.approx(3.75)
+    assert xfer.retries == 2 and xfer.abandoned == 0
+    assert xfer.stats()["retries"] == 2
+
+
+def test_transfer_engine_straggler_window_slows_copy():
+    win = StragglerWindow(t0=0.0, t1=10.0, factor=3.0, lane=0)
+    inj = FaultInjector(FaultPlan(seed=0, straggler_windows=(win,)))
+    xfer = TransferEngine(lanes=1, faults=inj)
+    t = xfer.submit(0.0, 1.0, key=("e", 0))
+    assert t.duration == pytest.approx(3.0)
+    assert inj.straggled == 1
+    # a copy starting after the window runs at nominal speed
+    t2 = xfer.submit(20.0, 1.0, key=("e", 1))
+    assert t2.duration == pytest.approx(1.0)
+
+
+def test_transfer_engine_deadline_cuts_and_abandons():
+    trace = TraceRecorder()
+    inj = FaultInjector(FaultPlan(seed=0, dma_failure_rate=0.0), trace=trace)
+    xfer = TransferEngine(lanes=1, faults=inj)
+    t = xfer.submit(0.0, 2.0, key=("kv", 9), deadline=1.5)
+    assert not t.ok
+    assert t.duration == pytest.approx(1.5)    # cut at the deadline
+    assert xfer.deadline_missed == 1 and xfer.abandoned == 1
+    assert any(e.action == "timeout" for e in trace.fault_events)
+    # deadlines met leave the transfer untouched
+    t2 = xfer.submit(0.0, 2.0, key=("kv", 10), deadline=10.0)
+    assert t2.ok and t2.duration == pytest.approx(2.0)
+
+
+def test_transfer_engine_deadline_without_injector():
+    xfer = TransferEngine(lanes=1)
+    t = xfer.submit(1.0, 2.0, key=("kv", 0), deadline=2.0)
+    assert not t.ok and t.duration == pytest.approx(1.0)
+    assert xfer.stats()["deadline_missed"] == 1
+
+
+# ====================================================== payload checksums
+def test_checksum_detects_real_corruption(setup):
+    cfg, params = setup
+    store = ExpertStore.from_params(params, cfg)
+    key = next(iter(store.keys()))
+    w = store.fetch(key)
+    assert store.verify(key, w)
+    assert store.checksum(key) == payload_checksum(w)
+
+    inj = FaultInjector(FaultPlan(seed=0, corruption_rate=1.0))
+    bad = inj.corrupt_payload(w)
+    assert not store.verify(key, bad)          # flipped byte detected
+    assert any(not np.array_equal(bad[n], w[n]) for n in w)
+    # the original payload is untouched (corruption copies)
+    assert store.verify(key, store.fetch(key))
+
+
+def test_corrupt_refetch_counted(setup):
+    cfg, params = setup
+    plan = FaultPlan(seed=2, corruption_rate=0.9, max_retries=5)
+    eng = OffloadEngine(params, cfg, cache_slots=2, faults=plan)
+    eng.generate([1, 2, 3], 4)
+    s = eng.stats()
+    assert s["fault_corruptions"] > 0
+    assert s["corrupt_refetches"] > 0
+
+
+# ================================================= null-plan bit identity
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(prefetch="spec"),
+    dict(prefetch="markov", overlap=True),
+])
+def test_engine_null_plan_bit_identical(setup, kw):
+    cfg, params = setup
+    outs = []
+    for faults in (None, FaultPlan.null()):
+        eng = OffloadEngine(params, cfg, cache_slots=3, faults=faults, **kw)
+        toks = eng.generate([1, 2, 3, 4], 6)
+        outs.append((toks, eng.sim_time, eng.stats(),
+                     eng.trace.to_json()))
+    a, b = outs
+    assert a[0] == b[0]
+    assert a[1] == b[1]
+    assert a[3] == b[3]
+    # stats differ only by the fault keys the injector build adds
+    extra = set(b[2]) - set(a[2])
+    assert all(k.startswith(("fault_", "degraded_", "dma_", "fetch_",
+                             "corrupt_")) for k in extra)
+    assert {k: v for k, v in b[2].items() if k in a[2]} == a[2]
+    # every added counter is zero under the null plan
+    assert all(b[2][k] == 0 for k in extra)
+
+
+def test_server_null_plan_bit_identical(setup):
+    cfg, params = setup
+    outs = []
+    for faults in (None, FaultPlan.null()):
+        srv = ContinuousOffloadServer(params, cfg, cache_slots=3,
+                                      max_batch=2, cache_len=32,
+                                      faults=faults)
+        r0 = srv.submit([1, 2, 3], max_new=5)
+        r1 = srv.submit([4, 5], max_new=4)
+        srv.run()
+        outs.append((srv.result(r0), srv.result(r1),
+                     srv.engine.sim_time, srv.trace.to_json()))
+    assert outs[0] == outs[1]
+
+
+def test_null_trace_stays_legacy_flat_list(setup):
+    cfg, params = setup
+    eng = OffloadEngine(params, cfg, cache_slots=3, faults=FaultPlan.null())
+    eng.generate([1, 2, 3], 3)
+    data = json.loads(eng.trace.to_json())
+    assert isinstance(data, list)              # no fault/tier wrapper
+    assert all("dropped" not in d and "request_degraded" not in d
+               for d in data)
+
+
+# ===================================================== degraded decode
+def test_degraded_decode_completes_and_accounts(setup):
+    """Every expert fetch abandoned -> decode still terminates: rows
+    whose whole activation set dropped contribute zero MoE output, and
+    the degradation is attributed per token."""
+    cfg, params = setup
+    plan = FaultPlan(seed=0, dma_failure_rate=1.0, max_retries=1)
+    eng = OffloadEngine(params, cfg, cache_slots=3, faults=plan)
+    toks = eng.generate([1, 2, 3], 5)
+    assert len(toks) == 3 + 5                  # prompt + every new token
+    s = eng.stats()
+    assert s["fault_abandoned"] > 0
+    assert s["fetch_failures"] > 0
+    assert s["degraded_tokens"] > 0
+    assert 0.0 < s["degraded_token_frac"] <= 1.0
+    deg, total = eng.trace.degraded_token_counts()
+    assert deg > 0 and total >= deg
+    assert any(st_.dropped for st_ in eng.trace.steps)
+    assert any(e.action == "abandon" for e in eng.trace.fault_events)
+
+
+def test_partial_degradation_renormalizes_over_residents(setup):
+    """Moderate fault rate: some fetches land, some abandon. Decode
+    proceeds, degraded steps record the dropped experts, and the
+    surviving experts of a degraded step were actually computed (the
+    step's trace shows them accessed)."""
+    cfg, params = setup
+    plan = FaultPlan(seed=5, dma_failure_rate=0.35, max_retries=0)
+    eng = OffloadEngine(params, cfg, cache_slots=3, faults=plan)
+    toks = eng.generate([1, 2, 3, 4], 8)
+    assert len(toks) == 4 + 8
+    dropped_steps = [s for s in eng.trace.steps if s.dropped]
+    kept_steps = [s for s in eng.trace.steps if not s.dropped]
+    assert dropped_steps and kept_steps        # genuinely partial
+    for s in dropped_steps:
+        assert set(s.dropped) <= set(s.activated) | set(s.misses)
+
+
+def test_degraded_decode_overlap_path(setup):
+    cfg, params = setup
+    plan = FaultPlan(seed=3, dma_failure_rate=0.4, max_retries=0)
+    eng = OffloadEngine(params, cfg, cache_slots=3, overlap=True,
+                        prefetch="spec", faults=plan)
+    toks = eng.generate([1, 2, 3], 6)
+    assert len(toks) == 3 + 6
+    assert eng.stats()["degraded_tokens"] > 0
+
+
+# ========================================================== chaos suite
+def _chaos_server(cfg, params, **kw):
+    defaults = dict(cache_slots=3, max_batch=2, cache_len=48,
+                    request_timeout_steps=12, max_queue=3,
+                    shed_wait_steps=4)
+    defaults.update(kw)
+    return ContinuousOffloadServer(params, cfg, **defaults)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_chaos_every_request_terminates_with_typed_status(setup, seed):
+    cfg, params = setup
+    plan = FaultPlan(seed=seed, dma_failure_rate=0.3,
+                     corruption_rate=0.05, max_retries=1,
+                     straggler_windows=(StragglerWindow(0.0, 1.0, 4.0),))
+    srv = _chaos_server(cfg, params, faults=plan)
+    rids, rejected = [], 0
+    for i in range(8):
+        try:
+            rids.append(srv.submit([1 + i, 2, 3], max_new=6,
+                                   deadline_steps=10 + i))
+        except AdmissionRejected as e:
+            assert e.reason == "queue_full"
+            rejected += 1
+    srv.run(max_steps=200)                      # bounded: never hangs
+    assert srv.pending == 0
+    assert len(rids) + rejected == 8
+    statuses = {r: srv.finished[r].status for r in rids}
+    assert set(statuses.values()) <= {"completed", "timeout", "shed"}
+    for r, req in srv.finished.items():
+        if req.status == "timeout":
+            assert req.shed_reason == "deadline_steps"
+        elif req.status == "shed":
+            assert req.shed_reason in ("queue_pressure", "queue_full")
+    s = srv.stats()
+    assert 0.0 <= s["availability"] <= 1.0
+    assert 0.0 <= s["shed_rate"] <= 1.0
+    assert s["p99_step_s"] >= 0.0
+    assert s["completed_requests"] + s["timeout_requests"] + \
+        s["shed_requests"] == len(rids)
+    assert s["rejected_requests"] == rejected
+
+
+def test_chaos_deterministic_replay(setup):
+    cfg, params = setup
+    plan = FaultPlan(seed=11, dma_failure_rate=0.25, max_retries=1)
+
+    def run():
+        srv = _chaos_server(cfg, params, faults=plan)
+        rids = [srv.submit([1, 2, 3], max_new=5) for _ in range(3)]
+        srv.run(max_steps=100)
+        return ({r: (srv.finished[r].status, tuple(srv.finished[r].out))
+                 for r in rids}, srv.trace.to_json())
+
+    assert run() == run()
+
+
+def test_queue_full_sheds_at_the_door(setup):
+    cfg, params = setup
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=3, max_batch=1,
+                                  cache_len=32, max_queue=1)
+    srv.submit([1, 2], max_new=3)               # sits in the queue
+    with pytest.raises(AdmissionRejected) as ei:
+        srv.submit([5, 6], max_new=3)           # admission happens at step()
+    assert ei.value.reason == "queue_full"
+    assert srv.rejected == 1
+    assert any(e.kind == "request" and e.action == "shed"
+               for e in srv.trace.fault_events)
+    srv.run()                                    # admitted work unharmed
+    assert srv.pending == 0
+
+
+def test_request_deadline_times_out(setup):
+    cfg, params = setup
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=3, max_batch=1,
+                                  cache_len=64)
+    rid = srv.submit([1, 2, 3], max_new=50, deadline_steps=4)
+    srv.run(max_steps=100)
+    req = srv.finished[rid]
+    assert req.status == "timeout"
+    assert req.shed_reason == "deadline_steps"
+    assert len(req.out) < 50                     # cut short
+    assert any(e.action == "timeout" and e.key == (rid,)
+               for e in srv.trace.fault_events)
+
+
+# ======================================================= input validation
+def test_engine_ctor_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="prefetch"):
+        OffloadEngine(params, cfg, cache_slots=2, prefetch="psychic")
+    with pytest.raises(ValueError, match="ffn_impl"):
+        OffloadEngine(params, cfg, cache_slots=2, ffn_impl="magic")
+    with pytest.raises(ValueError, match="cache_slots"):
+        OffloadEngine(params, cfg, cache_slots=0)
+    with pytest.raises(ValueError, match="cache_slots"):
+        OffloadEngine(params, cfg, cache_slots={0: 2, 1: 0})
+    with pytest.raises(ValueError):
+        OffloadEngine(params, cfg, cache_slots=2, faults=123)
+
+
+def test_server_ctor_validation(setup):
+    cfg, params = setup
+    mk = lambda **kw: ContinuousOffloadServer(
+        params, cfg, cache_slots=2, cache_len=16, **kw)
+    for bad in (dict(max_batch=0), dict(kv_layout="sparse"),
+                dict(kv_watermark=1.5), dict(prefill_chunk=0),
+                dict(tier_expert_frac=-0.1), dict(tier_expert_frac=1.5),
+                dict(request_timeout_steps=0), dict(max_queue=0),
+                dict(shed_wait_steps=0), dict(scheduler="psychic")):
+        with pytest.raises(ValueError):
+            mk(**bad)
+    with pytest.raises(ValueError):
+        ContinuousOffloadServer(params, cfg, cache_len=16)  # no slots
+
+
+def test_submit_validation(setup):
+    cfg, params = setup
+    srv = ContinuousOffloadServer(params, cfg, cache_slots=2, cache_len=16)
+    with pytest.raises(ValueError):
+        srv.submit([], max_new=3)
+    with pytest.raises(ValueError):
+        srv.submit([1, 2], max_new=-1)
+    with pytest.raises(ValueError):
+        srv.submit([1, 2], max_new=3, deadline_steps=0)
+
+
+def test_policy_and_scheduler_name_validation():
+    from repro.core.cache_policies import make_policy
+    from repro.serving.scheduler import make_scheduler
+    with pytest.raises(ValueError, match="unknown"):
+        make_policy("psychic", 4)
+    with pytest.raises(ValueError, match="unknown"):
+        make_scheduler("psychic")
+
+
+# ================================================== learned.npz hardening
+def test_learned_load_rejects_bad_files(tmp_path):
+    from repro.core.learned import LearnedModel, ModelLoadError
+    missing = tmp_path / "nope.npz"
+    with pytest.raises(ModelLoadError):
+        LearnedModel.load(str(missing))
+
+    notzip = tmp_path / "garbage.npz"
+    notzip.write_bytes(b"this is not an npz file")
+    with pytest.raises(ModelLoadError):
+        LearnedModel.load(str(notzip))
+
+    # a real checkpoint, then truncate it
+    w = np.zeros(7)
+    model = LearnedModel(w, w, np.ones(7))
+    good = tmp_path / "good.npz"
+    model.save(str(good))
+    assert LearnedModel.load(str(good)) is not None
+    truncated = tmp_path / "trunc.npz"
+    truncated.write_bytes(good.read_bytes()[:40])
+    with pytest.raises(ModelLoadError):
+        LearnedModel.load(str(truncated))
+
+    # valid zip, wrong members
+    wrongzip = tmp_path / "wrong.npz"
+    with zipfile.ZipFile(wrongzip, "w") as z:
+        z.writestr("unrelated.npy", b"x")
+    with pytest.raises(ModelLoadError):
+        LearnedModel.load(str(wrongzip))
+
+
+def test_learned_load_or_none_warns(tmp_path):
+    from repro.core.learned import LearnedModel
+    with pytest.warns(UserWarning):
+        assert LearnedModel.load_or_none(str(tmp_path / "nope.npz")) is None
+
+
+def test_learned_policy_falls_back_on_bad_checkpoint(tmp_path):
+    """A missing/corrupt checkpoint path degrades LearnedPolicy to its
+    exact AgedLFU fallback instead of crashing the engine build."""
+    from repro.core.cache_policies import AgedLFU, LearnedPolicy
+    with pytest.warns(UserWarning):
+        pol = LearnedPolicy(3, model=str(tmp_path / "nope.npz"))
+    ref = AgedLFU(3)
+    for p in (pol, ref):
+        for e in (0, 1, 2):
+            p.on_insert(e)
+        for e in (0, 1, 2, 0, 0, 1):
+            p.on_access(e)
+            p.tick()
+    assert pol.choose_victim() == ref.choose_victim()  # victim-exact
+
+
+# ================================================= trace JSON roundtrips
+def _mixed_trace():
+    tr = TraceRecorder()
+    tr.record(prompt_id=0, token_idx=0, layer=0, activated=(1, 2),
+              gate_weights=(0.6, 0.4), cache_before=(1,), cache_after=(1, 2),
+              hits=(1,), misses=(2,), evicted=(), dropped=(3,),
+              request_degraded=(True, False), request_ids=(0, 1),
+              request_token_idx=(0, 0), request_activated=((1, 2), (1,)))
+    tr.record(prompt_id=0, token_idx=1, layer=0, activated=(1,),
+              gate_weights=(1.0,), cache_before=(1, 2), cache_after=(1, 2),
+              hits=(1,), misses=(), evicted=())
+    tr.record_tier(kind="expert", event="demote", src="hbm", dst="host",
+                   nbytes=1024, key=(0, 1), sim_time=0.5)
+    tr.record_fault(kind="dma", action="retry", key=(0, 3), attempt=1,
+                    sim_time=0.25, detail="")
+    tr.record_fault(kind="request", action="shed", key=(7,),
+                    sim_time=1.0, detail="queue_pressure")
+    return tr
+
+
+def test_trace_roundtrip_mixed_tier_and_fault_events():
+    tr = _mixed_trace()
+    s = tr.to_json()
+    data = json.loads(s)
+    assert set(data) == {"steps", "tier_events", "fault_events"}
+    # fault-free steps stay stripped even inside the wrapper
+    assert "dropped" not in data["steps"][1]
+    assert "request_degraded" not in data["steps"][1]
+
+    back = TraceRecorder.from_json(s)
+    assert back.steps == tr.steps
+    assert back.tier_events == tr.tier_events
+    assert back.fault_events == tr.fault_events
+    assert back.to_json() == s                  # stable fixpoint
+    assert back.degraded_token_counts() == tr.degraded_token_counts() \
+        == (1, 3)
+
+
+def test_trace_from_json_tolerates_unknown_fields():
+    tr = _mixed_trace()
+    data = json.loads(tr.to_json())
+    data["steps"][0]["future_field"] = [1, 2, 3]
+    data["tier_events"][0]["lane_temp_c"] = 88
+    data["fault_events"][0]["blame"] = "cosmic ray"
+    data["an_unknown_top_level_list"] = []
+    back = TraceRecorder.from_json(json.dumps(data))
+    assert back.steps == tr.steps
+    assert back.tier_events == tr.tier_events
+    assert back.fault_events == tr.fault_events
+
+
+def test_trace_legacy_flat_list_still_loads():
+    tr = TraceRecorder()
+    tr.record(prompt_id=0, token_idx=0, layer=0, activated=(0,),
+              gate_weights=(1.0,), cache_before=(), cache_after=(0,),
+              hits=(), misses=(0,), evicted=())
+    s = tr.to_json()
+    assert isinstance(json.loads(s), list)
+    back = TraceRecorder.from_json(s)
+    assert back.steps == tr.steps and not back.fault_events
